@@ -1,0 +1,62 @@
+"""Kernel-path microbenchmarks (Appendix A.2 analog).
+
+The paper's Table 7 lists cycle counts per synthesized module
+(rmsnorm / quantize / matmul_768_768 / ... / matmul_768_32000).  The CPU
+analog times the same pipeline stages through our jnp execution paths
+(the Pallas kernels target TPU and only run in interpret mode here, which
+is not a timing surface), at the paper's exact shapes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantization import quantize
+from repro.core.qlinear import _qdot_dequant, _qdot_integer
+from repro.models.layers import rms_norm
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(quiet: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x768 = jax.random.normal(key, (1, 768))
+
+    # rmsnorm_768 (paper: 31.3 us on FPGA @250MHz)
+    g = jnp.ones((768,))
+    f = jax.jit(lambda x: rms_norm(x, g))
+    rows.append(("kernelbench/rmsnorm_768", _time(f, x768), "us/call"))
+
+    # quantize_768 (paper: 3.9 us)
+    f = jax.jit(lambda x: quantize(x).q)
+    rows.append(("kernelbench/quantize_768", _time(f, x768), "us/call"))
+
+    # the paper's three matvec shapes, integer vs dequant strategy
+    for n, k in [(768, 768), (2048, 768), (768, 2048), (32000, 768)]:
+        w = quantize(jax.random.normal(jax.random.fold_in(key, n + k),
+                                       (n, k)))
+        xv = jax.random.normal(key, (1, k))
+        fi = jax.jit(lambda x, w=w: _qdot_integer(x, w))
+        fd = jax.jit(lambda x, w=w: _qdot_dequant(x, w))
+        rows.append((f"kernelbench/matmul_{k}_{n}_integer",
+                     _time(fi, xv), "us/call"))
+        rows.append((f"kernelbench/matmul_{k}_{n}_dequant",
+                     _time(fd, xv), "us/call"))
+
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    return rows

@@ -1,0 +1,49 @@
+"""Aggregate dry-run JSONs into the §Roofline table (and markdown)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(out_dir: str = "results/dryrun"):
+    recs = []
+    for f in sorted(Path(out_dir).glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def run(quiet: bool = False, out_dir: str = "results/dryrun"):
+    rows = []
+    for r in load(out_dir):
+        if r.get("multi_pod"):
+            continue      # roofline table is single-pod per the assignment
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        rows.append((name, r["roofline_fraction"],
+                     f"dom={r['dominant']} tc={r['t_compute_s']:.3g}s "
+                     f"tm={r['t_memory_s']:.3g}s tx={r['t_collective_s']:.3g}s "
+                     f"useful={r['useful_flop_ratio']:.2f}"))
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.4f},{r[2]}")
+    return rows
+
+
+def markdown(out_dir: str = "results/dryrun") -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL/algo FLOPs | roofline frac | peak mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(out_dir):
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        mem = r.get("memory_analysis", {})
+        peak = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                + mem.get("output_bytes", 0)) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} "
+            f"| {r['t_compute_s']:.4g} | {r['t_memory_s']:.4g} "
+            f"| {r['t_collective_s']:.4g} | **{r['dominant']}** "
+            f"| {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {peak:.1f} GB |")
+    return "\n".join(lines)

@@ -1,0 +1,88 @@
+"""Tables 2–3 analog — inference speed (tok/s) and latency (ms/token).
+
+The paper measures 57.11 tok/s (FPGA int8) vs 23.21 (CPU fp32) vs 107
+(GPU fp16) at batch 1.  Absolute numbers on this container's CPU are not
+comparable hardware; the *reproduction target* is the RATIO structure:
+int8 weight streaming beats fp32 on a memory-bound decode loop.  We
+measure single-stream decode at fp32 / Q8_0(dequant) / Q8_0(integer) /
+Q4_0 on the paper's own 110M-config (reduced only in vocab to fit time
+budgets), plus batched decode (the paper's §5.2 future work).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.core.qlinear import set_default_strategy
+from repro.models import build_model, count_params
+
+
+def _decode_loop(model, params, cfg, batch: int, tokens: int,
+                 max_seq: int = 160):
+    """Prefill 16, decode ``tokens``; returns (tok/s, ms/token)."""
+    prompt = jnp.ones((batch, 16), jnp.int32)
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_seq=max_seq))(
+            params, {"tokens": prompt})
+    step = jax.jit(model.decode_step, donate_argnums=(1,))
+    tok = jnp.argmax(logits, -1)
+    # warmup + compile
+    logits, cache = step(params, cache, tok)
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(tokens):
+        logits, cache = step(params, cache, jnp.argmax(logits, -1))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return batch * tokens / dt, dt / tokens * 1e3
+
+
+def run(tokens: int = 32, quiet: bool = False):
+    t0 = time.time()
+    # the paper's model: 12L/768d/12H — vocab cut to keep CPU time sane
+    cfg = get_config("llama2-110m").with_(vocab_size=4096,
+                                          compute_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = count_params(params) / 1e6
+
+    rows = []
+    variants = [
+        ("fp32", params, "dequant"),
+        ("q8_dequant", model.quantize(params, QuantPolicy(min_size=512)),
+         "dequant"),
+        ("q8_integer", model.quantize(params, QuantPolicy(min_size=512)),
+         "integer"),
+        ("q4_dequant", model.quantize(params,
+                                      QuantPolicy(bits=4, min_size=512)),
+         "dequant"),
+    ]
+    base_toks = None
+    for name, p, strat in variants:
+        set_default_strategy(strat)
+        toks, ms = _decode_loop(model, p, cfg, batch=1, tokens=tokens)
+        if base_toks is None:
+            base_toks = toks
+        rows.append((f"throughput/decode_b1_{name}", ms * 1e3,
+                     f"{toks:.1f} tok/s ({toks/base_toks:.2f}x fp32; "
+                     f"paper fpga/cpu=2.46x)"))
+    set_default_strategy("dequant")
+
+    # batched decode (paper §5.2 future work)
+    q8 = variants[1][1]
+    for b in (4, 16):
+        toks, ms = _decode_loop(model, q8, cfg, batch=b, tokens=tokens)
+        rows.append((f"throughput/decode_b{b}_q8", ms * 1e3,
+                     f"{toks:.1f} tok/s aggregate"))
+
+    if not quiet:
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]}")
+        print(f"# throughput bench ({n:.0f}M params): {time.time()-t0:.0f}s")
+    return rows

@@ -1,0 +1,65 @@
+"""Multi-pod launch walkthrough: what runs on a real 512-chip cluster.
+
+On hardware, each host executes this file via the cluster scheduler with
+COORDINATOR/NUM_PROCESSES/PROCESS_ID set; jax.distributed wires the pods
+together and the SAME step functions from the dry-run execute for real.
+On this container it prints the launch plan and validates the mesh +
+sharding construction end-to-end with abstract values (no allocation).
+
+Run:  PYTHONPATH=src python examples/multipod_launch.py --arch glm4-9b
+"""
+
+import argparse
+import os
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    if "COORDINATOR_ADDRESS" in os.environ:
+        # real cluster path: one process per host
+        jax.distributed.initialize(
+            coordinator_address=os.environ["COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ["NUM_PROCESSES"]),
+            process_id=int(os.environ["PROCESS_ID"]))
+        print(f"process {jax.process_index()}/{jax.process_count()} up, "
+              f"{jax.local_device_count()} local devices")
+    else:
+        # container path: placeholder devices, identical program
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        print("no cluster env: using 512 placeholder host devices "
+              "(same code path as the dry-run)")
+
+    from repro.configs.base import get_config, shapes_for
+    from repro.launch import mesh as meshlib
+    from repro.launch import steps as steplib
+    from repro.models.model import build_model
+    from repro.optim import adamw
+
+    cfg = get_config(args.arch)
+    cell = {c.name: c for c in shapes_for(cfg)}[args.shape]
+    model = build_model(cfg)
+    mesh = meshlib.make_production_mesh(multi_pod=True)
+    print(f"mesh: {dict(mesh.shape)}  (pod x data x model)")
+
+    with mesh:
+        step, state_s, batch_s, _ = steplib.jit_train_step(
+            model, mesh, adamw.AdamWConfig(), cell)
+        lowered = step.lower(state_s, batch_s)
+        compiled = lowered.compile()
+        print("lower+compile OK — per-device memory:")
+        m = compiled.memory_analysis()
+        print(f"  arguments {m.argument_size_in_bytes/1e9:.2f} GB, "
+              f"temps {m.temp_size_in_bytes/1e9:.2f} GB")
+        print("on hardware, the next line would be: "
+              "state = jax.device_put(host_state, shardings); "
+              "then the train loop from repro.launch.train.")
+
+
+if __name__ == "__main__":
+    main()

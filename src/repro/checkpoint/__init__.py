@@ -1,0 +1,2 @@
+"""Sharded atomic checkpointing with async writes and resume."""
+from repro.checkpoint import store

@@ -1,0 +1,7 @@
+"""Architecture configs — one module per assigned arch (+ the paper's 110M)."""
+from repro.configs.base import (LM_SHAPES, ModelConfig, ShapeCell,
+                                get_config, list_configs, reduced,
+                                shapes_for)
+
+__all__ = ["LM_SHAPES", "ModelConfig", "ShapeCell", "get_config",
+           "list_configs", "reduced", "shapes_for"]

@@ -1,0 +1,12 @@
+"""Command-R 35B — dense GQA, no biases [hf:CohereForAI/c4ai-command-r-v01]."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("command-r-35b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="command-r-35b", family="dense",
+        n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=22528, vocab_size=256000, head_dim=128,
+        rope_theta=8e6,
+    )

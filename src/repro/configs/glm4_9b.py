@@ -1,0 +1,12 @@
+"""GLM-4-9B — dense GQA decoder [hf:THUDM/glm-4-9b]."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("glm4-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="glm4-9b", family="dense",
+        n_layers=40, d_model=4096, n_heads=32, n_kv_heads=2,
+        d_ff=13696, vocab_size=151552, head_dim=128,
+        rope_theta=1e4,
+    )

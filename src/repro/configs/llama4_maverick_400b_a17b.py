@@ -1,0 +1,20 @@
+"""Llama-4-Maverick 400B-A17B — interleaved MoE, 128 experts top-1
+[hf:meta-llama/Llama-4-Maverick-17B-128E].
+
+moe_every=2 (alternating dense / MoE layers, llama4 interleave) puts the
+total at ~400B with ~17B active — matching the name; an all-MoE stack at
+these dims would be ~775B.  Multimodal early fusion is out of scope (text
+backbone only, per the assignment's LM-family framing).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama4-maverick-400b-a17b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="llama4-maverick-400b-a17b", family="moe",
+        n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+        d_ff=8192, vocab_size=202048, head_dim=128,
+        n_experts=128, top_k=1, moe_every=2,
+        rope_theta=5e5, param_dtype="bfloat16", moe_shard="ep_data",
+    )

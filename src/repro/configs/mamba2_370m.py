@@ -1,0 +1,18 @@
+"""Mamba2-370M — attention-free SSD [arXiv:2405.21060].
+
+Sub-quadratic: runs the long_500k cell (state-space recurrence decode).
+The paper technique (Q8_0 weight quantization) applies to in/out
+projections; SSM dynamics params stay fp32 (DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("mamba2-370m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mamba2-370m", family="ssm",
+        n_layers=48, d_model=1024, n_heads=0, n_kv_heads=0,
+        d_ff=0, vocab_size=50280,
+        ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+        conv_width=4, rope_type="none", subquadratic=True,
+    )

@@ -1,0 +1,17 @@
+"""Qwen2-VL-7B — VLM backbone with M-RoPE [arXiv:2409.12191].
+
+Vision frontend is a stub per the assignment: input_specs() provides
+precomputed patch embeddings (B, S, D) plus (3, B, S) m-rope positions.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen2-vl-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen2-vl-7b", family="vlm",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+        d_ff=18944, vocab_size=152064, head_dim=128,
+        rope_theta=1e6, rope_type="mrope", mrope_sections=(16, 24, 24),
+        frontend="vision_stub",
+    )

@@ -1,0 +1,14 @@
+"""Qwen3-30B-A3B — MoE, 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.configs.base import ModelConfig, register
+
+
+@register("qwen3-moe-30b-a3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen3-moe-30b-a3b", family="moe",
+        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4,
+        d_ff=768, vocab_size=151936, head_dim=64,
+        n_experts=128, top_k=8,
+        rope_theta=1e6, param_dtype="bfloat16",
+        moe_shard="ep_data",
+    )

@@ -1,0 +1,20 @@
+"""Whisper-small — encoder-decoder audio backbone [arXiv:2212.04356].
+
+Conv frontend is a stub: input_specs() provides precomputed frame
+embeddings (B, 1500, D).  12 encoder + 12 decoder layers, LayerNorm+GELU,
+learned decoder positions (no RoPE), MHA (kv = heads).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-small")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="whisper-small", family="audio",
+        n_layers=12, n_enc_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=3072, vocab_size=51865, head_dim=64,
+        rope_type="none", norm_type="layernorm", mlp_type="gelu",
+        enc_seq=1504,      # 1500 frames padded to a TP-divisible length
+        train_shard="dp",  # 242M params: pure DP beats TP collectives
+        frontend="audio_stub", tie_embeddings=True,
+    )

@@ -1,0 +1,18 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+Hybrid: 38 Mamba2 layers with ONE shared attention+MLP block applied after
+every 6th SSM layer (params shared across applications, as in Zamba2).
+Sub-quadratic end-to-end: runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("zamba2-1.2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=32000, head_dim=64,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_groups=1,
+        conv_width=4, attn_every=6, rope_theta=1e4, subquadratic=True,
+    )

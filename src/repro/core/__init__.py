@@ -1,0 +1,17 @@
+"""HLSTransform core: Q8_0/Q4_0 quantization, policy, quantized matmul."""
+
+from repro.core.quantization import (DEFAULT_GROUP_SIZE, QuantizedTensor,
+                                     choose_group_size, dequantize,
+                                     qmatmul_ref, quantization_error,
+                                     quantize, quantize_q4_0, quantize_q8_0)
+from repro.core.policy import (PAPER_POLICY, Q4_POLICY, SERVE_POLICY,
+                               QuantPolicy, count_bytes, quantize_params)
+from repro.core.qlinear import (default_strategy, qdot, set_default_strategy)
+
+__all__ = [
+    "DEFAULT_GROUP_SIZE", "QuantizedTensor", "choose_group_size",
+    "dequantize", "qmatmul_ref", "quantization_error", "quantize",
+    "quantize_q4_0", "quantize_q8_0", "PAPER_POLICY", "Q4_POLICY",
+    "SERVE_POLICY", "QuantPolicy", "count_bytes", "quantize_params",
+    "default_strategy", "qdot", "set_default_strategy",
+]

@@ -1,0 +1,118 @@
+"""Quantization policy — which parameters get quantized (paper §3.2).
+
+The paper quantizes the embedding, attention, and feed-forward weights and
+keeps the RMSNorm parameters (error-sensitive) in fp32.  We generalize that
+to the whole arch pool: every *large matmul operand* is quantized, every
+norm/bias/small-state parameter stays in float.
+
+Policy is expressed over pytree paths so it composes with any model in
+``repro.models`` without the models knowing about quantization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import jax
+
+from repro.core.quantization import (DEFAULT_GROUP_SIZE, QuantizedTensor,
+                                     quantize)
+
+# Path fragments that must NEVER be quantized (paper: RMSNorm fp32; we add
+# the other error-sensitive / tiny tensors of the broader arch pool).
+_FLOAT_PATTERNS = (
+    r"norm",          # rms / layer norms (paper-mandated fp32)
+    r"\bbias\b",
+    r"rope",          # rotary tables
+    r"pos",           # learned positional tables (enc_pos / dec_pos)
+    r"wdt",           # SSM dt projection — dt is precision-sensitive
+    r"conv",          # mamba short conv + whisper conv frontend stubs
+    r"A_log", r"\bdt", r"ssm_dt", r"dt_bias",   # SSM dynamics params
+    r"D_skip",
+    r"router",        # MoE router: tiny and precision-sensitive
+    r"gamma", r"beta",
+)
+_FLOAT_RE = re.compile("|".join(_FLOAT_PATTERNS))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """What to quantize and how.
+
+    ``bits``/``group_size`` follow the paper defaults (Q8_0, groups of 64).
+    ``min_size`` skips tiny tensors where scales would dominate bytes.
+    """
+
+    bits: int = 8
+    group_size: int = DEFAULT_GROUP_SIZE
+    min_size: int = 4096          # don't quantize tensors smaller than this
+    quantize_embedding: bool = True   # paper quantizes the embedding
+    kv_cache_bits: Optional[int] = None  # beyond-paper: int8 KV cache
+
+    def wants(self, path: str, shape: tuple) -> bool:
+        if _FLOAT_RE.search(path):
+            return False
+        if not self.quantize_embedding and "embed" in path:
+            return False
+        n = 1
+        for d in shape:
+            n *= d
+        if n < self.min_size:
+            return False
+        return len(shape) >= 2  # only matmul operands
+
+
+PAPER_POLICY = QuantPolicy()                       # faithful: Q8_0 / g=64
+Q4_POLICY = QuantPolicy(bits=4)                    # beyond-paper (§5.1)
+SERVE_POLICY = QuantPolicy(kv_cache_bits=8)        # beyond-paper int8 KV
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_params(params: Any, policy: QuantPolicy = PAPER_POLICY) -> Any:
+    """Post-training quantization of a parameter pytree (paper: PTQ only).
+
+    Weights are stored contraction-last by convention throughout
+    ``repro.models`` (shape ``(out, in)`` / ``(..., in)``), so per-group
+    scales along the last axis line up with the matmul contraction.
+    """
+
+    def _convert(path, leaf):
+        ps = _path_str(path)
+        if isinstance(leaf, QuantizedTensor):
+            return leaf
+        if hasattr(leaf, "shape") and policy.wants(ps, tuple(leaf.shape)):
+            return quantize(leaf, group_size=policy.group_size, bits=policy.bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(_convert, params)
+
+
+def count_bytes(params: Any) -> dict:
+    """Bytes by storage class — drives the memory-roofline term and the
+    Table-6 energy model."""
+    tally = {"quantized": 0, "float": 0}
+
+    def _visit(leaf):
+        if isinstance(leaf, QuantizedTensor):
+            tally["quantized"] += leaf.nbytes()
+        elif hasattr(leaf, "nbytes"):
+            tally["float"] += int(leaf.nbytes)
+        return leaf
+
+    jax.tree_util.tree_map(
+        _visit, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    tally["total"] = tally["quantized"] + tally["float"]
+    return tally

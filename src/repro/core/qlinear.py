@@ -1,0 +1,171 @@
+"""Quantized linear layers — the paper's integer matmul, three ways.
+
+Every large matmul in the serving path runs against int8 (or packed int4)
+weights.  Three execution strategies share identical math (tests assert
+mutual agreement):
+
+``integer``   Faithful to the paper/llama2.c: activations are Q8_0-quantized
+              on the fly, int8×int8 products accumulate in int32 within each
+              group of 64, partial sums are rescaled by ``xs*ws`` and summed
+              in f32.  Implemented as a ``lax.scan`` over groups so the
+              int32 intermediate never exceeds one group's partials.
+
+``dequant``   Weight-only quantization: int8 weights are dequantized inside
+              the matmul (XLA fuses the convert+scale into the dot operand
+              on TPU, so HBM still reads int8).  Mathematically identical to
+              ``integer`` up to f32 summation order.  This is the strategy
+              large-scale serving stacks use; it is also the strategy the
+              distributed dry-run lowers, because it needs no custom kernel
+              on the host platform.
+
+``pallas``    The TPU kernel (kernels/q8_matmul.py): fused
+              quantize→int8-dot→rescale with explicit VMEM BlockSpecs —
+              the TPU-native rendering of the paper's pipelined,
+              burst-read GEMV engine.
+
+Weights are stored ``(out, in)`` contraction-last; ``qdot(x, w)`` computes
+``x @ dequant(w).T`` with whatever strategy is configured.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.quantization import (QuantizedTensor, _unpack_nibbles,
+                                     quantize)
+
+Weight = Union[jax.Array, QuantizedTensor]
+
+# Module-level default strategy; models thread an explicit value through, this
+# is only the fallback so examples/tests can flip globally.
+_DEFAULT_STRATEGY = "dequant"
+
+
+def set_default_strategy(s: str) -> None:
+    global _DEFAULT_STRATEGY
+    assert s in ("integer", "dequant", "pallas")
+    _DEFAULT_STRATEGY = s
+
+
+def default_strategy() -> str:
+    return _DEFAULT_STRATEGY
+
+
+def _unpacked_q(w: QuantizedTensor) -> jax.Array:
+    return _unpack_nibbles(w.q) if w.bits == 4 else w.q
+
+
+# model-axis size of the production meshes (launch/mesh.py); used only to
+# pick the GSPMD-friendly dequant formulation below.
+_MODEL_AXIS = 16
+
+
+def _dequant_weight(w: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """int8 codes * per-group scale, shaped back to (out, in).
+
+    Two formulations, chosen statically by group alignment (measured in
+    EXPERIMENTS.md §Perf cell 3, iterations 4–5):
+
+    * G % model_axis == 0 (scale shardable): the ``(N, G, gs)`` reshape is
+      shard-local and fuses into the consuming dot — use it.
+    * G % model_axis != 0 (sharding rules replicate the scale): the
+      reshape would force GSPMD to all-gather the ENTIRE K-sharded weight
+      (28 MB x n_layers/step on glm4); expanding the replicated scale with
+      a gather ``scale[..., k // gs]`` keeps everything elementwise along
+      K and shard-local instead (t_coll −19.5x).
+    """
+    wq = _unpacked_q(w)
+    *lead, k = wq.shape
+    g = w.scale.shape[-1]
+    if g % _MODEL_AXIS == 0:
+        wf = wq.reshape(*lead, g, k // g).astype(dtype) \
+            * w.scale[..., None].astype(dtype)
+        return wf.reshape(*lead, k)
+    idx = jnp.arange(k, dtype=jnp.int32) // w.group_size
+    scale_full = jnp.take(w.scale, idx, axis=-1).astype(dtype)
+    return wq.astype(dtype) * scale_full
+
+
+def _qdot_dequant(x: jax.Array, w: QuantizedTensor) -> jax.Array:
+    wf = _dequant_weight(w, dtype=jnp.float32)
+    return jax.lax.dot_general(
+        x.astype(jnp.float32), wf,
+        dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _qdot_integer(x: jax.Array, w: QuantizedTensor) -> jax.Array:
+    """Paper-faithful: dynamic act quant + per-group int32 accumulation."""
+    gs = w.group_size
+    xq_t = quantize(x, group_size=gs, bits=8)   # activations always Q8_0
+    xq, xs = xq_t.q, xq_t.scale
+    wq = _unpacked_q(w)
+    *bx, k = xq.shape
+    n = wq.shape[0]
+    g = k // gs
+    xg = jnp.moveaxis(xq.reshape(*bx, g, gs), -2, 0)       # (g, *bx, gs)
+    xsg = jnp.moveaxis(xs, -1, 0)                          # (g, *bx)
+    wg = jnp.moveaxis(wq.reshape(n, g, gs), 1, 0)          # (g, n, gs)
+    wsg = jnp.moveaxis(w.scale, -1, 0)                     # (g, n)
+
+    def body(acc, operands):
+        xg_i, xsg_i, wg_i, wsg_i = operands
+        # int8 x int8 -> int32 dot over one group (exact)
+        p = jax.lax.dot_general(
+            xg_i, wg_i,
+            dimension_numbers=(((xg_i.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)              # (*bx, n)
+        acc = acc + p.astype(jnp.float32) * xsg_i[..., None] * wsg_i
+        return acc, None
+
+    acc0 = jnp.zeros((*bx, n), jnp.float32)
+    acc, _ = lax.scan(body, acc0, (xg, xsg, wg, wsg))
+    return acc
+
+
+def _qdot_pallas(x: jax.Array, w: QuantizedTensor, interpret: bool) -> jax.Array:
+    from repro.kernels import ops as kops
+    return kops.q8_matmul(x, w, interpret=interpret)
+
+
+def as_float(w: Weight, dtype=jnp.float32) -> jax.Array:
+    """Dequantize if needed — used by einsum-shaped consumers."""
+    if isinstance(w, QuantizedTensor):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def qeinsum(eq: str, x: jax.Array, w: Weight) -> jax.Array:
+    """einsum against a possibly-quantized weight (dequant strategy).
+
+    Used where operands are head-structured (attention QKV/O) — XLA fuses
+    the int8->f32 convert+scale into the contraction on TPU, so HBM still
+    reads int8.  The paper-exact integer path stays available through
+    ``qdot`` / the Pallas kernels for 2-D serving matmuls.
+    """
+    if isinstance(w, QuantizedTensor):
+        return jnp.einsum(eq, x.astype(jnp.float32), as_float(w)).astype(x.dtype)
+    return jnp.einsum(eq, x, w.astype(x.dtype))
+
+
+def qdot(x: jax.Array, w: Weight, strategy: Optional[str] = None,
+         interpret: bool = False) -> jax.Array:
+    """``x @ w.T`` where ``w`` may be float (training) or quantized (serving)."""
+    if not isinstance(w, QuantizedTensor):
+        return jax.lax.dot_general(
+            x, w.astype(x.dtype),
+            dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=x.dtype)
+    s = strategy or _DEFAULT_STRATEGY
+    if s == "dequant":
+        return _qdot_dequant(x, w)
+    if s == "integer":
+        return _qdot_integer(x, w)
+    if s == "pallas":
+        return _qdot_pallas(x, w, interpret=interpret)
+    raise ValueError(f"unknown strategy {s!r}")

@@ -1,0 +1,215 @@
+"""Q8_0 / Q4_0 symmetric per-group quantization (HLSTransform, §3.2).
+
+The paper quantizes weights with the GGML "Q8_0" scheme: each weight vector
+is split into fixed-size groups and every group ``w`` is mapped to
+
+    q = round(127 * w / ||w||_inf)        (int8)
+    scale = ||w||_inf / 127               (f32)
+
+so that ``w ≈ q * scale``.  Activations are quantized with the same scheme
+on the fly, which makes every matmul an int8×int8→int32 computation with a
+per-(group, output) rescale — integer-only arithmetic on the hot path.
+
+This module implements that scheme as a JAX pytree (:class:`QuantizedTensor`)
+plus a 4-bit packed variant ("Q4_0", the paper's §5.1 future-work direction).
+The group size defaults to 64, the paper's AXI4 burst width (64 int8/cycle);
+on TPU the same number keeps scale vectors lane-aligned for 128-wide loads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_GROUP_SIZE = 64  # the paper's burst width: 64 int8 per cycle over AXI4.
+
+
+def choose_group_size(dim: int, preferred: int = DEFAULT_GROUP_SIZE) -> int:
+    """Largest divisor of ``dim`` that is <= ``preferred``.
+
+    The assigned architectures all have contraction dims divisible by 64;
+    this fallback keeps odd dims (e.g. head_dim 96) working with a smaller
+    group rather than failing.
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    g = min(preferred, dim)
+    while dim % g != 0:
+        g -= 1
+    return g
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A symmetric per-group quantized tensor.
+
+    ``q`` holds int8 codes (for 4-bit, two codes packed per byte along the
+    grouped axis), ``scale`` holds one f32 per group.  Grouping is always
+    along the **last** axis; callers move the contraction axis last before
+    quantizing (all weights in this repo are stored contraction-last).
+
+    shape bookkeeping for ``bits=8``:
+        q:     (*lead, K)            int8
+        scale: (*lead, K // group)   f32
+    for ``bits=4`` (packed):
+        q:     (*lead, K // 2)       int8 (two nibbles)
+        scale: (*lead, K // group)   f32
+    """
+
+    q: jax.Array
+    scale: jax.Array
+    group_size: int
+    bits: int = 8
+    orig_dim: int = -1  # unpacked size of the last axis
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.group_size, self.bits, self.orig_dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, scale = children
+        group_size, bits, orig_dim = aux
+        return cls(q=q, scale=scale, group_size=group_size, bits=bits,
+                   orig_dim=orig_dim)
+
+    # -- convenience -------------------------------------------------------
+    @property
+    def shape(self):
+        return self.q.shape[:-1] + (self.orig_dim,)
+
+    @property
+    def n_groups(self) -> int:
+        return self.orig_dim // self.group_size
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self, dtype=dtype)
+
+    def nbytes(self) -> int:
+        """Serialized payload size — what HBM traffic is proportional to."""
+        qb = int(np.prod(self.q.shape))  # int8 => 1 byte each
+        sb = 4 * int(np.prod(self.scale.shape))
+        return qb + sb
+
+
+def _qmax(bits: int) -> int:
+    if bits == 8:
+        return 127
+    if bits == 4:
+        return 7
+    raise ValueError(f"unsupported bits={bits}")
+
+
+def _pack_nibbles(q: jax.Array) -> jax.Array:
+    """Pack int8 values in [-8, 7] pairwise along the last axis."""
+    lo = q[..., 0::2]
+    hi = q[..., 1::2]
+    return ((hi.astype(jnp.int8) << 4) | (lo.astype(jnp.int8) & 0x0F)).astype(jnp.int8)
+
+
+def _unpack_nibbles(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`_pack_nibbles`; sign-extends each nibble."""
+    lo = (p << 4).astype(jnp.int8) >> 4          # arithmetic shift sign-extends
+    hi = p.astype(jnp.int8) >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+@partial(jax.jit, static_argnames=("group_size", "bits"))
+def _quantize_impl(x: jax.Array, group_size: int, bits: int):
+    qmax = _qmax(bits)
+    *lead, k = x.shape
+    g = k // group_size
+    xg = x.reshape(*lead, g, group_size).astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xg), axis=-1, keepdims=True)
+    # Exactly the paper's formula: q = round(qmax * w / ||w||_inf), with the
+    # all-zero group special-cased (scale 0 -> dequantizes back to 0).
+    scale = absmax / qmax
+    inv = jnp.where(absmax > 0, qmax / absmax, 0.0)
+    q = jnp.clip(jnp.round(xg * inv), -qmax, qmax).astype(jnp.int8)
+    q = q.reshape(*lead, k)
+    scale = scale.reshape(*lead, g)
+    if bits == 4:
+        q = _pack_nibbles(q)
+    return q, scale
+
+
+def quantize(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE,
+             bits: int = 8) -> QuantizedTensor:
+    """Symmetric per-group quantization along the last axis (Q8_0 / Q4_0)."""
+    k = x.shape[-1]
+    group_size = choose_group_size(k, group_size)
+    if bits == 4 and (group_size % 2 != 0 or k % 2 != 0):
+        raise ValueError("Q4_0 packing needs an even grouped axis")
+    q, scale = _quantize_impl(x, group_size, bits)
+    return QuantizedTensor(q=q, scale=scale, group_size=group_size, bits=bits,
+                           orig_dim=k)
+
+
+def quantize_q8_0(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    return quantize(x, group_size=group_size, bits=8)
+
+
+def quantize_q4_0(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
+    return quantize(x, group_size=group_size, bits=4)
+
+
+@partial(jax.jit, static_argnames=("group_size", "dtype"))
+def _dequantize_q8(q, scale, group_size: int, dtype):
+    *lead, k = q.shape
+    g = k // group_size
+    xg = q.reshape(*lead, g, group_size).astype(jnp.float32)
+    out = xg * scale[..., None]
+    return out.reshape(*lead, k).astype(dtype)
+
+
+def dequantize(t: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    q = _unpack_nibbles(t.q) if t.bits == 4 else t.q
+    return _dequantize_q8(q, t.scale, t.group_size, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Reference quantized matmul semantics (the oracle the Pallas kernels match).
+# ---------------------------------------------------------------------------
+
+def qmatmul_ref(x: QuantizedTensor, w: QuantizedTensor) -> jax.Array:
+    """``dequant(x) @ dequant(w)`` computed the *integer-arithmetic* way.
+
+    x: activations, shape (*batch, K), grouped along K.
+    w: weights, stored contraction-last as (N, K), grouped along K.
+    returns f32 (*batch, N).
+
+    Semantics match the paper/llama2.c: int8×int8 products accumulate in
+    int32 *within a group*, each group partial sum is rescaled by
+    ``xs[g] * ws[n, g]`` and summed in f32 across groups.
+    """
+    if x.group_size != w.group_size:
+        raise ValueError(f"group size mismatch {x.group_size} vs {w.group_size}")
+    gs = x.group_size
+    xq = _unpack_nibbles(x.q) if x.bits == 4 else x.q
+    wq = _unpack_nibbles(w.q) if w.bits == 4 else w.q
+    *bx, k = xq.shape
+    n, kw = wq.shape
+    if k != kw:
+        raise ValueError(f"contraction mismatch {k} vs {kw}")
+    g = k // gs
+    xg = xq.reshape(*bx, g, gs).astype(jnp.int32)
+    wg = wq.reshape(n, g, gs).astype(jnp.int32)
+    # int32 partial dot per (batch, n, group)
+    part = jnp.einsum("...gk,ngk->...ng", xg, wg).astype(jnp.float32)
+    # rescale: activations per (batch, group), weights per (n, group)
+    scaled = part * x.scale[..., None, :] * w.scale
+    return jnp.sum(scaled, axis=-1)
+
+
+def quantization_error(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE,
+                       bits: int = 8) -> jax.Array:
+    """Max-abs round-trip error — used by tests and the quality benchmark."""
+    t = quantize(x, group_size=group_size, bits=bits)
+    return jnp.max(jnp.abs(t.dequantize() - x))

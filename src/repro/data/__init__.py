@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic TinyStories-like stream, packing, sharding."""
+from repro.data.pipeline import DataConfig, SyntheticTinyStories, eval_batches

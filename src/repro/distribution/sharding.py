@@ -1,0 +1,317 @@
+"""Sharding rules: pytree paths -> PartitionSpec, per mode (train / serve).
+
+The mesh is (data=16, model=16), optionally with a leading pure-DP "pod"
+axis.  Scheme (DESIGN.md §4):
+
+TRAIN / PREFILL (Megatron-style TP over `model`):
+  * embedding + LM head: vocab on `model` (the chunked CE loss all-reduces
+    logsumexp stats across vocab shards),
+  * attention: q heads on `model` (head-structured weights — GSPMD pads
+    when H % 16 != 0); KV heads sharded only when divisible, else
+    replicated (small; blockwise attention broadcasts them to H),
+  * MLP: column-parallel w1/w3, row-parallel w2,
+  * MoE: experts on `model` (EP),
+  * Mamba2: d_inner and everything aligned with it (heads, conv channels,
+    gated-norm gamma) on `model`; B/C projections replicated (tiny),
+  * batch on (`pod`, `data`).
+
+SERVE (decode): identical except
+  * attention projections shard the d_model *contraction*
+    (``serve_attn_shard='din'``): at a few rows per chip every matmul is a
+    GEMV, so row-parallel + one small all-reduce beats head-column
+    sharding whose KV heads don't divide the axis,
+  * the KV cache shards its *sequence* axis on `model` (flash-decode
+    sequence parallelism) unless KVH divides the axis.
+Both serve choices are hillclimb knobs (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.quantization import QuantizedTensor
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def dp_axes(mesh) -> Any:
+    """The batch-carrying mesh axes: ('pod','data') multi-pod, 'data' else."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _pad(spec_tail: tuple, rank: int) -> P:
+    """Left-pad with None for stacked leading (layer/superblock) dims."""
+    return P(*([None] * (rank - len(spec_tail)) + list(spec_tail)))
+
+
+def _rule(path: str, rank: int, cfg: ModelConfig, model_size: int,
+          mode: str) -> P:
+    if mode == "train" and cfg.train_shard == "dp":
+        # pure data parallelism: params replicated, batch over ALL axes —
+        # the right regime for small models where TP collectives dominate
+        # (hillclimbed on whisper-small, EXPERIMENTS.md §Perf)
+        return P(*([None] * rank))
+
+    kv_div = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_size == 0
+
+    if re.search(r"^(embed|lm_head)$", path):
+        return P("model", None)
+    if re.search(r"enc_pos|dec_pos", path):
+        return P(None, None)
+    if re.search(r"norm|gamma|beta", path):
+        if "/ssm/" in path:                      # gated-norm gamma (d_inner,)
+            return _pad(("model",), rank)
+        return _pad((None,), rank)
+
+    # --- attention (head-structured: wq/wk/wv (H, hd, D), wo (D, H, hd)) ---
+    # Explicit NamedShardings must divide exactly, so the head axis is
+    # only sharded when H % model == 0; otherwise fall back to sharding
+    # head_dim (always a multiple of 16 here) — costs a rope halo
+    # exchange + per-projection all-reduce, logged as a §Perf finding.
+    h_div = cfg.n_heads > 0 and cfg.n_heads % model_size == 0
+    if re.search(r"/(attn|cross)/w[qkv]$", path):
+        is_kv = path.endswith("wk") or path.endswith("wv")
+        if mode == "serve" and cfg.serve_attn_shard == "din":
+            return _pad((None, None, "model"), rank)
+        if is_kv:
+            # KV must be layout-consistent with Q: replicated when Q is
+            # head-sharded (the broadcast to H then slices locally —
+            # a KV/Q axis mismatch triggers involuntary full
+            # rematerialization in SPMD), hd-sharded when Q is.
+            if kv_div:
+                return _pad(("model", None, None), rank)
+            if h_div:
+                return _pad((None, None, None), rank)
+            if cfg.hd() % model_size == 0:
+                return _pad((None, "model", None), rank)
+            return _pad((None, None, None), rank)
+        if h_div:
+            return _pad(("model", None, None), rank)
+        if cfg.hd() % model_size == 0:
+            return _pad((None, "model", None), rank)
+        return _pad((None, None, None), rank)
+    if re.search(r"/(attn|cross)/wo$", path):
+        if h_div:
+            return _pad((None, "model", None), rank)
+        if cfg.hd() % model_size == 0:
+            return _pad((None, None, "model"), rank)
+        return _pad((None, None, None), rank)
+
+    # --- MoE (E leading: expert parallelism) ---
+    if path.endswith("router"):
+        return _pad((None, None), rank)
+    if re.search(r"/moe/w[13]$", path):
+        if cfg.moe_shard == "ep_data":
+            # FSDP-EP: experts over `data`, d_ff over `model` — the only
+            # layout where a ~400B MoE fits 16 GB/chip (params, grads and
+            # Adam moments all shard over BOTH axes; expert-gradient sync
+            # is free since data shards own disjoint experts)
+            return _pad(("data", "model", None), rank)
+        return _pad(("model", None, None), rank)
+    if re.search(r"/moe/w2$", path):
+        if cfg.moe_shard == "ep_data":
+            return _pad(("data", None, "model"), rank)
+        return _pad(("model", None, None), rank)
+
+    # --- dense MLP ---
+    if re.search(r"/mlp/w[13]$", path):
+        return _pad(("model", None), rank)
+    if re.search(r"/mlp/w2$", path):
+        return _pad((None, "model"), rank)
+
+    # --- Mamba2 ---
+    if re.search(r"/ssm/w[zx]$", path):
+        return _pad(("model", None), rank)
+    if re.search(r"/ssm/w[BC]$", path):
+        return _pad((None, None), rank)
+    if re.search(r"/ssm/wdt$", path):            # heads follow d_inner shards
+        return _pad(("model", None), rank)
+    if re.search(r"conv_x_bias$", path):
+        return _pad(("model",), rank)
+    if re.search(r"conv_[BC]_bias$", path):
+        return _pad((None,), rank)
+    if re.search(r"conv_x$", path):
+        return _pad(("model", None), rank)
+    if re.search(r"conv_[BC]$", path):
+        return _pad((None, None), rank)
+    if re.search(r"A_log$|dt_bias$|D_skip$", path):
+        return _pad(("model",), rank)
+    if path.endswith("out_proj"):
+        return _pad((None, "model"), rank)
+
+    return P(*([None] * rank))
+
+
+def sanitize(spec: P, shape: tuple, mesh) -> P:
+    """Null out any spec entry whose dim doesn't divide the axis size —
+    explicit NamedShardings must divide exactly (no GSPMD padding at the
+    jit boundary)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, parts):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(axis if dim % size == 0 else None)
+    return P(*out)
+
+
+def _spec_for_leaf(path: str, leaf, cfg, mesh, mode: str):
+    model_size = mesh.shape["model"]
+    if isinstance(leaf, QuantizedTensor):
+        # codes keep the float weight's spec; scales shrink the grouped
+        # last axis (and Q4 packs it 2:1) — sanitize drops entries that
+        # no longer divide.
+        spec = _rule(path, len(leaf.q.shape), cfg, model_size, mode)
+        return QuantizedTensor(
+            q=sanitize(spec, leaf.q.shape, mesh),
+            scale=sanitize(spec, leaf.scale.shape, mesh),
+            group_size=leaf.group_size, bits=leaf.bits, orig_dim=leaf.orig_dim)
+    spec = _rule(path, len(leaf.shape), cfg, model_size, mode)
+    return sanitize(spec, leaf.shape, mesh)
+
+
+def param_specs(cfg: ModelConfig, params: Any, mesh, mode: str = "train"
+                ) -> Any:
+    """Pytree of PartitionSpec matching ``params`` (arrays or ShapeDtype)."""
+    def visit(path, leaf):
+        return _spec_for_leaf(_path_str(path), leaf, cfg, mesh, mode)
+
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            n *= mesh.shape[a]
+    return n
+
+
+def batch_axes_for(cfg: ModelConfig, mesh, mode: str = "train"):
+    """Mesh axes carrying the batch dim.  Pure-DP training uses ALL axes
+    (the model axis holds no params); otherwise everything but `model`.
+    Falls back to fewer axes until the product divides nothing is the
+    caller's job (see ``_best_batch_spec``)."""
+    if mode == "train" and cfg.train_shard == "dp":
+        return tuple(mesh.axis_names)
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return axes
+
+
+def _best_batch_spec(cfg: ModelConfig, mesh, bdim: int, mode: str):
+    """Largest suffix of the batch axes whose product divides ``bdim``."""
+    axes = batch_axes_for(cfg, mesh, mode)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if bdim % size == 0:
+            return axes if len(axes) > 1 else axes[0]
+        axes = axes[1:]          # drop the outermost (pod first)
+    return None
+
+
+def data_specs(cfg: ModelConfig, batch: Any, mesh, mode: str = "train"
+               ) -> Any:
+    """Input batch: batch dim over the batch axes; m-rope positions are
+    (3, B, S) so the batch dim sits second.  A batch smaller than the
+    batch axes (long_500k: B=1) is replicated — the data axis sits idle
+    for a single-request latency shape."""
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        r = len(leaf.shape)
+        if r == 0:
+            return P()
+        if "positions" in p and r == 3:          # m-rope (3, B, S)
+            return P(None, _best_batch_spec(cfg, mesh, leaf.shape[1], mode),
+                     None)
+        return P(_best_batch_spec(cfg, mesh, leaf.shape[0], mode),
+                 *([None] * (r - 1)))
+
+    return jax.tree_util.tree_map_with_path(visit, batch)
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, mesh) -> Any:
+    """Decode-state sharding.
+
+    Attention K/V (…lead, B, S, KVH, hd): KVH on `model` when divisible,
+    else S on `model` (flash-decode SP).  SSM state (…, B, H, P, N): heads
+    on `model`.  Conv ring buffers: channels on `model` for the x buffer
+    (path …/conv/0), replicated for tiny B/C buffers.
+    """
+    dp = dp_axes(mesh)
+    dsz = _dp_size(mesh)
+    msize = mesh.shape["model"]
+    kv_div = cfg.n_kv_heads > 0 and cfg.n_kv_heads % msize == 0
+
+    def bspec(bdim):
+        return dp if bdim % dsz == 0 else None
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        r = len(leaf.shape)
+        if p.endswith("lens"):
+            return P(bspec(leaf.shape[0]))
+        if p.endswith("/k") or p.endswith("/v"):
+            lead = r - 4                         # (…, B, S, KVH, hd)
+            b, s = leaf.shape[lead], leaf.shape[lead + 1]
+            if kv_div:
+                tail = (None, "model", None)
+            elif s % msize == 0:
+                tail = ("model", None, None)     # flash-decode SP over S
+            else:
+                tail = (None, None, None)
+            return P(*([None] * lead + [bspec(b)] + list(tail)))
+        if p.endswith("/ks") or p.endswith("/vs"):
+            lead = r - 3                         # (…, B, S, KVH)
+            b, s = leaf.shape[lead], leaf.shape[lead + 1]
+            if kv_div:
+                tail = (None, "model")
+            elif s % msize == 0:
+                tail = ("model", None)
+            else:
+                tail = (None, None)
+            return P(*([None] * lead + [bspec(b)] + list(tail)))
+        if p.endswith("state"):                  # (…, B, H, P, N)
+            lead = r - 4
+            h = leaf.shape[lead + 1]
+            return P(*([None] * lead +
+                       [bspec(leaf.shape[lead]),
+                        "model" if h % msize == 0 else None, None, None]))
+        if "/conv/" in p:                        # (…, B, W-1, C)
+            lead = r - 3
+            ch = "model" if p.endswith("/0") and \
+                leaf.shape[-1] % msize == 0 else None
+            return P(*([None] * lead + [bspec(leaf.shape[lead]), None, ch]))
+        return P(*[bspec(leaf.shape[0])] + [None] * (r - 1))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def to_shardings(tree_of_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))

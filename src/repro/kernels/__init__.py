@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the HLSTransform hot spots.
+
+Each kernel ships three surfaces:
+  <name>.py  — the pl.pallas_call with explicit BlockSpec VMEM tiling,
+  ops.py     — jit'd padded wrappers (the API models call),
+  ref.py     — pure-jnp oracles tests assert against (interpret=True).
+"""

@@ -1,0 +1,112 @@
+"""Flash-attention forward Pallas kernel (prefill / training).
+
+The decode path has its own kernel (decode_attention.py); this one covers
+the other half of the paper's workload when scaled up: full-sequence
+attention during prefill, where the (S, S) score matrix must never touch
+HBM.  Standard flash structure on TPU:
+
+  grid = (batch*heads, q_blocks, k_blocks)   k innermost (sequential)
+  VMEM scratch: running max m, running sum l, accumulator acc
+  causal masking prunes fully-masked k-blocks via @pl.when
+
+The jnp oracle is layers.attention_scores_blockwise (same math, scan
+form); tests sweep shapes and assert allclose in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, n_k_blocks: int, causal: bool,
+            scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip blocks strictly above the diagonal
+    run = (not causal) or (ki * block_k <= (qi + 1) * block_q - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        if causal:
+            p = jnp.where(kpos <= qpos, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finish():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] /
+                    jnp.where(l > 0, l, 1.0)).astype(o_ref.dtype)
+
+
+def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, interpret: bool = False
+                         ) -> jax.Array:
+    """q/k/v: (BH, S, D) flat batch*heads (wrapper repeats GQA KV heads).
+    Returns (BH, S, D) f32; q is scaled by 1/sqrt(D) inside."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must divide blocks ({block_q},{block_k})")
+    nq, nk = s // block_q, s // block_k
+    scale = d ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                          n_k_blocks=nk, causal=causal, scale=scale),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

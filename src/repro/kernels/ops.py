@@ -1,0 +1,160 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, activation quantization, layout
+massaging (the kernels want flat 2-D operands), and the interpret flag
+(True on this CPU container; False when targeting real TPUs).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QuantizedTensor, quantize
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_prefill import flash_prefill_pallas
+from repro.kernels.q4_matmul import q4_matvec_pallas
+from repro.kernels.q8_matmul import q8_matmul_pallas
+from repro.kernels.q8_matvec import q8_matvec_pallas
+from repro.kernels.rmsnorm_quant import rmsnorm_quant_pallas
+from repro.kernels.rope import rope_pallas
+
+# decode-vs-prefill dispatch threshold: below this many rows per shard the
+# GEMV kernel (activations resident, no K grid) wins.
+MATVEC_MAX_ROWS = 32
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_m", "block_n",
+                                   "block_k"))
+def q8_matmul(x: jax.Array, w: QuantizedTensor, *, interpret: bool = False,
+              block_m: int = 128, block_n: int = 256, block_k: int = 512
+              ) -> jax.Array:
+    """x (…, K) f32  @  wq (N, K).T  with paper-exact integer semantics.
+
+    Quantizes activations Q8_0 on the fly, dispatches GEMV/GEMM on row
+    count, pads every dim to block multiples and slices the result back.
+    """
+    if w.bits not in (4, 8):
+        raise ValueError(f"bits={w.bits}")
+    gs = w.group_size
+    *lead, k = x.shape
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    xq_t = quantize(x2, group_size=gs, bits=8)
+    xq, xs = xq_t.q, xq_t.scale
+    wq, ws = w.q, w.scale
+    n = wq.shape[0]
+
+    if w.bits == 4:
+        bn = min(512, n) if n % 512 == 0 else _largest_block(n, 512)
+        out = q4_matvec_pallas(xq, xs, wq, ws, group_size=gs, block_n=bn,
+                               interpret=interpret)
+    elif m <= MATVEC_MAX_ROWS:
+        bn = _largest_block(n, 512)
+        out = q8_matvec_pallas(xq, xs, wq, ws, group_size=gs, block_n=bn,
+                               interpret=interpret)
+    else:
+        bm = _largest_block(m, block_m)
+        bn_ = _largest_block(n, block_n)
+        bk = _largest_block(k, block_k, mult=gs)
+        out = q8_matmul_pallas(xq, xs, wq, ws, group_size=gs, block_m=bm,
+                               block_n=bn_, block_k=bk, interpret=interpret)
+    return out.reshape(*lead, n)
+
+
+def _largest_block(dim: int, preferred: int, mult: int = 1) -> int:
+    """Largest divisor of ``dim`` <= preferred that is a multiple of mult."""
+    b = min(preferred, dim)
+    while b > 1 and (dim % b or b % mult):
+        b -= 1
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("eps", "group_size", "interpret"))
+def rmsnorm_quant(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
+                  group_size: int = 64, interpret: bool = False):
+    """Fused RMSNorm + Q8_0: (…, K) f32 -> ((…, K) i8, (…, K/gs) f32)."""
+    *lead, k = x.shape
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    bm = _largest_block(m, 256)
+    q, s = rmsnorm_quant_pallas(x2, gamma, eps=eps, group_size=group_size,
+                                block_m=bm, interpret=interpret)
+    return q.reshape(*lead, k), s.reshape(*lead, k // group_size)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rope(x: jax.Array, cos: jax.Array, sin: jax.Array, *,
+         interpret: bool = False) -> jax.Array:
+    """x: (B, H, D); cos/sin: (B, D) (full-width, already duplicated halves)."""
+    b, h, d = x.shape
+    x2 = x.reshape(b * h, d)
+    cos2 = jnp.repeat(cos, h, axis=0)
+    sin2 = jnp.repeat(sin, h, axis=0)
+    bm = _largest_block(b * h, 256)
+    out = rope_pallas(x2, cos2, sin2, block_m=bm, interpret=interpret)
+    return out.reshape(b, h, d)
+
+
+@partial(jax.jit, static_argnames=("interpret", "block_s"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lens: jax.Array, k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None, *,
+                     block_s: int = 512, interpret: bool = False
+                     ) -> jax.Array:
+    """Single-token attention vs. a (possibly int8) KV cache.
+
+    q: (B, H, D) already scaled by 1/sqrt(D); k/v: (B, S, KVH, D);
+    lens: (B,) int32 valid lengths.  Returns (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    kvh = k.shape[2]
+    hq = h // kvh
+    qg = q.reshape(b, kvh, hq, d)
+    s = k.shape[1]
+    bs = _largest_block(s, block_s)
+    out = decode_attention_pallas(qg, k, v, lens.reshape(b, 1),
+                                  k_scale, v_scale, block_s=bs,
+                                  interpret=interpret)
+    return out.reshape(b, h, d)
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret", "block_q",
+                                   "block_k"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, block_q: int = 128,
+                  block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """Full-sequence attention: q (B,S,H,D); k/v (B,S,KVH,D) -> (B,S,H,D).
+
+    GQA KV heads are repeated to H (XLA keeps it a gather) and the head
+    axis folds into the grid's batch dim; blocks pad via the wrapper."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    hq = h // kvh
+    kr = jnp.repeat(k, hq, axis=2)
+    vr = jnp.repeat(v, hq, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kf = jnp.moveaxis(kr, 2, 1).reshape(b * h, s, d)
+    vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, s, d)
+    bq = _largest_block(s, block_q)
+    bk = _largest_block(s, block_k)
+    out = flash_prefill_pallas(qf, kf, vf, causal=causal, block_q=bq,
+                               block_k=bk, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, s, d), 1, 2)

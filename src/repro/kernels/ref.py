@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors a kernel's signature on raw arrays and computes the
+same math with plain jnp ops.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle in interpret mode.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_q8_matmul(xq: jax.Array, xs: jax.Array, wq: jax.Array,
+                  ws: jax.Array, group_size: int = 64) -> jax.Array:
+    """Integer-exact grouped matmul: (M,K)i8,(M,G)f32 x (N,K)i8,(N,G)f32."""
+    m, k = xq.shape
+    n = wq.shape[0]
+    g = k // group_size
+    xg = xq.reshape(m, g, group_size).astype(jnp.int32)
+    wg = wq.reshape(n, g, group_size).astype(jnp.int32)
+    part = jnp.einsum("mgk,ngk->mng", xg, wg).astype(jnp.float32)
+    # rescale by activation scale (m, g) and weight scale (n, g), sum groups
+    return jnp.sum(part * xs[:, None, :] * ws[None, :, :], axis=-1)
+
+
+def ref_rmsnorm_quant(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,
+                      group_size: int = 64):
+    x = x.astype(jnp.float32)
+    m, k = x.shape
+    g = k // group_size
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    yg = y.reshape(m, g, group_size)
+    absmax = jnp.max(jnp.abs(yg), axis=-1, keepdims=True)
+    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
+    q = jnp.clip(jnp.round(yg * inv), -127, 127).astype(jnp.int8)
+    return q.reshape(m, k), (absmax / 127.0).reshape(m, g)
+
+
+def ref_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    d = x.shape[-1]
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2:]
+    rot = jnp.concatenate([-x2, x1], axis=-1)
+    return (x32 * cos + rot * sin).astype(x.dtype)
+
+
+def ref_q4_matvec(xq: jax.Array, xs: jax.Array, wq_packed: jax.Array,
+                  ws: jax.Array, group_size: int = 64) -> jax.Array:
+    lo = (wq_packed << 4).astype(jnp.int8) >> 4
+    hi = wq_packed.astype(jnp.int8) >> 4
+    n, kh = wq_packed.shape
+    wq = jnp.stack([lo, hi], axis=-1).reshape(n, kh * 2)
+    return ref_q8_matmul(xq, xs, wq, ws, group_size)
+
+
+def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lens: jax.Array, k_scale=None, v_scale=None
+                         ) -> jax.Array:
+    """q: (B, KVH, HQ, D) pre-scaled; k/v: (B, S, KVH, D); lens (B, 1)."""
+    b, kvh, hq, d = q.shape
+    s = k.shape[1]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale[..., None]
+        vf = vf * v_scale[..., None]
+    scores = jnp.einsum("bhqd,bshd->bhqs", q.astype(jnp.float32), kf)
+    pos = jnp.arange(s)[None, None, None, :]
+    mask = pos < lens[:, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhqs,bshd->bhqd", p, vf)
+
+
+def ref_flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True) -> jax.Array:
+    """q (B,S,H,D); k/v (B,S,KVH,D): exact softmax attention oracle."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    kr = jnp.repeat(k, h // kvh, axis=2).astype(jnp.float32)
+    vr = jnp.repeat(v, h // kvh, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * d ** -0.5,
+                        kr)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)

@@ -1,0 +1,52 @@
+"""Rotary position embedding Pallas kernel.
+
+The paper singles RoPE out as a subroutine that is awkward on GPUs and
+pipelines it on the FPGA (``forward_Pipeline_rotation1``).  On TPU it is a
+pure VPU (8x128 vector unit) elementwise pass; the kernel exists so the
+decode path can run it fused and VMEM-resident instead of as several XLA
+ops.  Llama/neox convention: rotate halves.
+
+    out = x * cos  +  rotate_half(x) * sin,   rotate_half(x) = [-x2, x1]
+
+The wrapper pre-broadcasts cos/sin to the flattened (rows, D) layout so the
+kernel is a clean 2-D elementwise grid (lane dim = head_dim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    d = x.shape[-1]
+    x1 = x[..., : d // 2]
+    x2 = x[..., d // 2:]
+    rot = jnp.concatenate([-x2, x1], axis=-1)
+    o_ref[...] = (x * cos_ref[...] + rot * sin_ref[...]).astype(o_ref.dtype)
+
+
+def rope_pallas(x: jax.Array, cos: jax.Array, sin: jax.Array, *,
+                block_m: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (M, D) rows=(batch*heads[*seq]); cos/sin: (M, D) pre-broadcast."""
+    m, d = x.shape
+    block_m = min(block_m, m)
+    if m % block_m:
+        raise ValueError(f"M={m} not a multiple of block_m={block_m}")
+    grid = (m // block_m,)
+    spec = pl.BlockSpec((block_m, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, cos, sin)

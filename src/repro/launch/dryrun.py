@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 TPU v5e pods, and
+``jax.jit(...).lower().compile()`` must succeed for every cell.  The
+compiled artifact + jaxpr yield the §Roofline inputs:
+
+  * launch/flops.py      exact algorithmic FLOPs (scan-aware; XLA's
+                         cost_analysis counts while bodies once — verified
+                         — so it cannot be used directly),
+  * launch/hlo_cost.py   per-device ICI wire bytes from the optimized HLO
+                         with while-trip correction,
+  * launch/roofline.py   analytic HBM traffic + term assembly,
+  * ``memory_analysis()``  per-device allocation (fits-check; note the
+                         CPU backend allocator over-reports temps vs the
+                         TPU layout-aware allocator).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun
+"""
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, list_configs, shapes_for
+from repro.launch import flops as flopslib
+from repro.launch import hlo_cost, roofline
+from repro.launch import mesh as meshlib
+from repro.launch import steps as steplib
+from repro.models.model import build_model, count_params
+from repro.optim import adamw
+
+
+def model_flops(cfg, cell, pstruct) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (infer)."""
+    n_total = count_params(pstruct)
+    n_active = n_total
+    if cfg.n_experts and cfg.top_k:
+        n_pat = cfg.n_layers // cfg.moe_every
+        per_expert = 3 * cfg.d_ff * cfg.d_model
+        n_active = n_total - n_pat * (cfg.n_experts - cfg.top_k) * per_expert
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch      # one decode step
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               quantized: bool = True, zero: bool = True,
+               cfg_overrides: dict | None = None, microbatches: int = 0,
+               quant_bits: int = 8):
+    """Lower + compile one cell.
+
+    Returns (compiled, flops_fn, cfg, cell, pstruct, cstruct) where
+    flops_fn() lazily computes the exact algorithmic FLOPs via jaxpr.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    cells = {c.name: c for c in shapes_for(cfg)}
+    if shape_name not in cells:
+        raise SystemExit(
+            f"{arch} skips {shape_name} (see DESIGN.md §Arch-applicability)")
+    cell = cells[shape_name]
+    model = build_model(cfg)
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+
+    with mesh:
+        if cell.kind == "train":
+            step, state_s, batch_s, _ = steplib.jit_train_step(
+                model, mesh, adamw.AdamWConfig(), cell, zero=zero,
+                microbatches=microbatches)
+            lowered = step.lower(state_s, batch_s)
+            raw = steplib.make_train_step(
+                model, adamw.AdamWConfig(),
+                microbatches or steplib.pick_microbatches(cell, mesh,
+                                                          cfg=cfg))
+            flops_fn = lambda: flopslib.count_flops(raw, state_s, batch_s)
+            pstruct = state_s["params"]
+            cstruct = None
+        elif cell.kind == "prefill":
+            from repro.core.policy import QuantPolicy
+            step, pstruct, batch_s = steplib.jit_prefill_step(
+                model, mesh, cell, quantized=quantized,
+                policy=QuantPolicy(bits=quant_bits))
+            lowered = step.lower(pstruct, batch_s)
+            raw = steplib.make_prefill_step(model, cell.seq_len)
+            flops_fn = lambda: flopslib.count_flops(raw, pstruct, batch_s)
+            cstruct = steplib.cache_struct(model, cell)
+        else:
+            from repro.core.policy import QuantPolicy
+            step, pstruct, cstruct, batch_s = steplib.jit_serve_step(
+                model, mesh, cell, quantized=quantized,
+                policy=QuantPolicy(bits=quant_bits))
+            lowered = step.lower(pstruct, cstruct, batch_s["tokens"])
+            raw = steplib.make_serve_step(model)
+            flops_fn = lambda: flopslib.count_flops(
+                raw, pstruct, cstruct, batch_s["tokens"])
+        compiled = lowered.compile()
+    return compiled, flops_fn, cfg, cell, pstruct, cstruct
+
+
+def analyse(compiled, flops_fn, cfg, cell, pstruct, cstruct,
+            n_devices: int, microbatches: int, mesh=None) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem = compiled.memory_analysis()
+    coll = hlo_cost.collective_wire_bytes(compiled.as_text())
+
+    algo_flops = flops_fn()
+    p_bytes = roofline.tree_bytes(pstruct)
+    c_bytes = roofline.tree_bytes(cstruct) if cstruct is not None else 0
+    mf = model_flops(cfg, cell, pstruct)
+    p_dev = 0.0
+    if mesh is not None:
+        from repro.distribution import sharding as shlib
+        mode = "train" if cell.kind == "train" else "serve"
+        pspecs = shlib.param_specs(cfg, pstruct, mesh, mode=mode)
+        p_dev = roofline.per_device_bytes(pstruct, pspecs, mesh)
+    membd = roofline.analytic_bytes(cfg, cell, n_devices, p_bytes, c_bytes,
+                                    microbatches, param_bytes_per_dev=p_dev)
+
+    rec = roofline.assemble(cfg, cell, n_devices, algo_flops, mf, membd,
+                            coll["total"],
+                            {"flops_while_once": float(cost.get("flops", 0)),
+                             "bytes_while_once": float(
+                                 cost.get("bytes accessed", 0))})
+    rec["collective_breakdown"] = coll
+    rec["param_bytes_global"] = p_bytes
+    rec["cache_bytes_global"] = c_bytes
+    rec["microbatches"] = microbatches
+    try:
+        rec["memory_analysis"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+        }
+    except Exception:
+        rec["memory_analysis"] = {}
+    return rec
+
+
+def run_cell(arch, shape, multi_pod, out_dir=None, quantized=True,
+             zero=True, overrides=None, microbatches: int = 0,
+             verbose=True, tag_suffix="", quant_bits: int = 8):
+    t0 = time.time()
+    compiled, flops_fn, cfg, cell, pstruct, cstruct = lower_cell(
+        arch, shape, multi_pod, quantized=quantized, zero=zero,
+        cfg_overrides=overrides, microbatches=microbatches,
+        quant_bits=quant_bits)
+    n_dev = 512 if multi_pod else 256
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    mb = microbatches or (steplib.pick_microbatches(cell, mesh, cfg=cfg)
+                          if cell.kind == "train" else 1)
+    rec = analyse(compiled, flops_fn, cfg, cell, pstruct, cstruct, n_dev, mb,
+                  mesh=mesh)
+    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["multi_pod"] = multi_pod
+    if verbose:
+        print(json.dumps(rec, indent=2, default=str))
+    if out_dir:
+        out = Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}__{shape}__{'2pod' if multi_pod else '1pod'}{tag_suffix}"
+        (out / f"{tag}.json").write_text(json.dumps(rec, indent=2,
+                                                    default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-quant", action="store_true",
+                    help="serve cells with float weights (paper-baseline "
+                         "comparison)")
+    args = ap.parse_args()
+
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    if args.all:
+        targets = []
+        for arch in list_configs():
+            if arch == "llama2-110m":
+                continue        # the paper model is benchmarked, not dry-run
+            cfg = get_config(arch)
+            for cell in shapes_for(cfg):
+                targets.append((arch, cell.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape or --all required")
+        targets = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in targets:
+        for mp in pods:
+            tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'}"
+            done = Path(args.out) / \
+                f"{arch}__{shape}__{'2pod' if mp else '1pod'}.json"
+            if args.all and done.exists():
+                print(f"[skip cached] {tag}", flush=True)
+                continue
+            print(f"=== {tag} ===", flush=True)
+            try:
+                t0 = time.time()
+                run_cell(arch, shape, mp, out_dir=args.out,
+                         quantized=not args.no_quant, verbose=False)
+                print(f"    OK ({time.time()-t0:.0f}s)", flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((tag, repr(e)[:500]))
+                print(f"    FAIL {tag}: {repr(e)[:300]}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" -", t, e)
+        sys.exit(1)
+    print("\nall cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Collective-traffic analysis of optimized (post-SPMD) HLO text.
+
+Parses ``compiled.as_text()``, finds every collective op, multiplies ops
+inside ``while`` bodies by the loop trip count (extracted from the loop
+condition's comparison constant — cost_analysis does NOT do this), and
+converts each op to per-device ICI wire bytes with standard ring-algorithm
+factors:
+
+    all-reduce        2·b·(g-1)/g      (reduce-scatter + all-gather phases)
+    all-gather        out·(g-1)/g      (each device receives all but its own)
+    reduce-scatter    in·(g-1)/g  = out·(g-1)
+    all-to-all        b·(g-1)/g
+    collective-permute b
+
+where g = replica-group size parsed from the op's replica_groups.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\)?\s*"
+    r"(all-gather|all-reduce|all-reduce-start|reduce-scatter|all-to-all|"
+    r"collective-permute|collective-permute-start)\(")
+_WHILE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS = re.compile(
+    r"(?:to_apply|calls|condition|body|branch_computations)=\{?%?([\w\.\-]+)")
+_ROOT_CMP = re.compile(
+    r"ROOT\s+%?[\w\.\-]+\s*=\s*pred\[\]\s*compare\(([^)]*)\)"
+    r".*direction=(LT|LE|GT|GE)")
+_CONST_DEF = re.compile(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)")
+_GROUPS = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = [line]
+                depth = line.count("{") - line.count("}")
+                if depth <= 0:
+                    cur = None
+        else:
+            comps[cur].append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                cur = None
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def _wire_bytes(op: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op.startswith("all-reduce"):
+        return 2.0 * out_bytes * (g - 1) / g
+    if op == "all-gather":
+        return out_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(out_bytes) * (g - 1)
+    if op == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return float(out_bytes)       # collective-permute
+
+
+def _trip_count(cond_text: str) -> int:
+    """Trip count of a scan-style loop: the ROOT ``compare(ind, const)``
+    of the condition computation; const resolved within the computation."""
+    consts = {name: int(val) for name, val in _CONST_DEF.findall(cond_text)}
+    m = _ROOT_CMP.search(cond_text)
+    if not m:
+        return 1
+    operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    direction = m.group(2)
+    for op in operands:
+        # operand may carry a type prefix like "s32[] %name"
+        name = op.split()[-1].lstrip("%")
+        if name in consts:
+            v = consts[name]
+            return v + 1 if direction in ("LE", "GE") else v
+    return 1
+
+
+def collective_wire_bytes(hlo: str, default_group: int = 1) -> Dict[str, float]:
+    """Per-device ICI wire bytes by collective kind, while-trip corrected."""
+    comps = _split_computations(hlo)
+
+    # map computation -> list of (op, bytes_wire)
+    per_comp: Dict[str, List[Tuple[str, float]]] = {}
+    # computation -> list of (callee, multiplier_kind)
+    calls: Dict[str, List[Tuple[str, str]]] = {}
+    whiles: Dict[str, List[Tuple[str, str]]] = {}
+
+    for name, text in comps.items():
+        ops = []
+        for m in _COLL.finditer(text):
+            dtype, dims, op = m.group(1), m.group(2), m.group(3)
+            line = text[m.start(): text.find("\n", m.start())]
+            g = _group_size(line, default_group)
+            op_base = op.replace("-start", "")
+            ops.append((op_base, _wire_bytes(op_base, _shape_bytes(dtype, dims), g)))
+        per_comp[name] = ops
+        whiles[name] = [(m.group(1), m.group(2))
+                        for m in _WHILE.finditer(text)]
+        callees = set(_CALLS.findall(text))
+        calls[name] = [(c, "call") for c in callees]
+
+    tally: Dict[str, float] = {}
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.add(name)
+        for op, b in per_comp.get(name, []):
+            tally[op] = tally.get(op, 0.0) + b * mult
+        handled = set()
+        for cond, body in whiles.get(name, []):
+            trips = _trip_count(comps.get(cond, ""))
+            visit(body, mult * trips)
+            visit(cond, mult * trips)
+            handled.add(body)
+            handled.add(cond)
+        for callee, _ in calls.get(name, []):
+            if callee not in handled and callee != name:
+                visit(callee, mult)
+        seen_stack.discard(name)
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: sum everything once
+        for name in comps:
+            visit(name, 1.0)
+    else:
+        visit(entry, 1.0)
+
+    tally["total"] = sum(v for k, v in tally.items() if k != "total")
+    return tally

@@ -1,0 +1,89 @@
+"""Serving launcher: quantize a (trained or fresh) model per the paper's
+PTQ flow and serve batched requests with the continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama2-110m \
+      --reduced --requests 16 --bits 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.base import get_config, reduced
+from repro.core.policy import QuantPolicy
+from repro.models.model import build_model, count_params
+from repro.serving.engine import Engine
+
+
+def run(arch: str = "llama2-110m", use_reduced: bool = True,
+        requests: int = 16, bits: int = 8, kv_int8: bool = False,
+        max_seq: int = 512, max_new: int = 48, slots: int = 4,
+        ckpt_dir: str = "", seed: int = 0, no_quant: bool = False):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    if kv_int8:
+        cfg = cfg.with_(kv_cache_dtype="int8")
+    model = build_model(cfg)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    if ckpt_dir:
+        state_like = {"params": params}
+        restored, step, _ = store.restore(ckpt_dir, {"params": params})
+        params = restored["params"]
+        print(f"[serve] loaded checkpoint step {step}")
+
+    if not no_quant:
+        t0 = time.perf_counter()
+        params = model.quantize(params, QuantPolicy(bits=bits, min_size=512))
+        print(f"[serve] Q{bits}_0 post-training quantization "
+              f"in {time.perf_counter()-t0:.2f}s")
+
+    eng = Engine(model, params, max_slots=slots, max_seq=max_seq, seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(requests):
+        plen = int(rng.integers(4, 32))
+        prompt = rng.integers(4, cfg.vocab_size, size=plen).astype(np.int32)
+        eng.submit(prompt, max_new_tokens=max_new)
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    toks = eng.metrics["tokens_out"]
+    print(f"[serve] {len(done)}/{requests} requests, {toks} tokens in "
+          f"{wall:.2f}s -> {toks/wall:,.1f} tok/s wall, "
+          f"{eng.throughput_tok_s():,.1f} tok/s decode-only")
+    lat = [r.t_first_token - r.t_enqueue for r in done]
+    if lat:
+        print(f"[serve] TTFT p50 {np.median(lat)*1e3:.0f}ms  "
+              f"p95 {np.percentile(lat, 95)*1e3:.0f}ms")
+    return eng, done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-110m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--bits", type=int, default=8, choices=(4, 8))
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--no-quant", action="store_true")
+    ap.add_argument("--max-seq", type=int, default=512)
+    ap.add_argument("--max-new", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.set_defaults(reduced=True)
+    args = ap.parse_args()
+    run(args.arch, args.reduced, args.requests, args.bits, args.kv_int8,
+        args.max_seq, args.max_new, args.slots, args.ckpt_dir,
+        no_quant=args.no_quant)
+
+
+if __name__ == "__main__":
+    main()

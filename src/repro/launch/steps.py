@@ -1,0 +1,326 @@
+"""jit-able train / prefill / serve steps with explicit shardings.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the launchers run for real.  All distribution is expressed as
+GSPMD in/out shardings + a few with_sharding_constraint pins; the step
+bodies are the plain model functions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.core.policy import QuantPolicy
+from repro.distribution import sharding as sh
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """Abstract input batch for one shape cell.
+
+    train:   token/label batch (or stub embeds for vlm/audio frontends).
+    prefill: prompt batch of seq_len.
+    decode:  one token per sequence + a full-length cache (built separately
+             via cache_specs_struct).
+    """
+    b, s = cell.global_batch, cell.seq_len
+    f32 = jnp.dtype("float32")
+    i32 = jnp.dtype("int32")
+    sd = jax.ShapeDtypeStruct
+
+    if cell.kind == "train":
+        if cfg.family == "vlm":
+            return {"embeds": sd((b, s, cfg.d_model), f32),
+                    "labels": sd((b, s), i32)}
+        if cfg.family == "audio":
+            return {"frames": sd((b, cfg.enc_seq, cfg.d_model), f32),
+                    "tokens": sd((b, s), i32),
+                    "labels": sd((b, s), i32)}
+        return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+
+    if cell.kind == "prefill":
+        if cfg.family == "vlm":
+            return {"embeds": sd((b, s, cfg.d_model), f32)}
+        if cfg.family == "audio":
+            return {"frames": sd((b, cfg.enc_seq, cfg.d_model), f32),
+                    "tokens": sd((b, s), i32)}
+        return {"tokens": sd((b, s), i32)}
+
+    # decode: one new token against a seq_len cache
+    return {"tokens": sd((b,), i32)}
+
+
+def cache_struct(model: Model, cell: ShapeCell):
+    return jax.eval_shape(lambda: model.init_cache(cell.global_batch,
+                                                   cell.seq_len))
+
+
+def params_struct(model: Model, quantized: bool = False,
+                  policy: Optional[QuantPolicy] = None):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    ps = jax.eval_shape(model.init, key)
+    if quantized:
+        ps = jax.eval_shape(
+            functools.partial(model.quantize, policy=policy), ps)
+    return ps
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(model: Model, ocfg: adamw.AdamWConfig,
+                    microbatches: int = 1):
+    """Grad-accumulation train step: the global batch is split into
+    ``microbatches`` sequential slices (scan), bounding activation memory
+    to one microbatch while keeping the same effective batch."""
+    cfg = model.cfg
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch))(params)
+        else:
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch)
+
+            def micro(acc, mbatch):
+                gsum, lsum = acc
+                l, g = jax.value_and_grad(
+                    lambda p: model.loss(p, mbatch))(params)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), mb)
+            k = float(microbatches)
+            grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
+            loss = lsum / k
+
+        params, opt, metrics, _ = adamw.apply_updates(
+            params, state["opt"], grads, ocfg)
+        metrics["loss"] = loss
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_seq: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_seq=max_seq)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+def make_serve_sample_step(model: Model, temperature: float = 1.0):
+    """Fused decode + communication-avoiding sampling: the (B, V) logits
+    never leave their vocab shards — the Gumbel-max argmax reduces to a
+    tiny cross-shard winner exchange (serving/sampling_distributed.py)."""
+    from repro.serving.sampling_distributed import gumbel_argmax
+
+    def serve_sample_step(params, cache, tokens, key):
+        logits, cache = model.decode_step(params, cache, tokens)
+        nxt = gumbel_argmax(key, logits, temperature)
+        return nxt, cache
+
+    return serve_sample_step
+
+
+def jit_serve_sample_step(model: Model, mesh, cell: ShapeCell,
+                          quantized: bool = True,
+                          policy: Optional[QuantPolicy] = None):
+    cfg = model.cfg
+    pstruct = params_struct(model, quantized=quantized, policy=policy)
+    batch_struct = input_specs(cfg, cell)
+    cstruct = cache_struct(model, cell)
+
+    pspecs = sh.param_specs(cfg, pstruct, mesh, mode="serve")
+    cspecs = sh.cache_specs(cfg, cstruct, mesh)
+    bdim = batch_struct["tokens"].shape[0]
+    bspec = sh._best_batch_spec(cfg, mesh, bdim, "serve")
+    tok_shard = NamedSharding(mesh, P(bspec))
+    key_shard = NamedSharding(mesh, P())
+
+    step = jax.jit(
+        make_serve_sample_step(model),
+        in_shardings=(sh.to_shardings(pspecs, mesh),
+                      sh.to_shardings(cspecs, mesh), tok_shard, key_shard),
+        out_shardings=(tok_shard, sh.to_shardings(cspecs, mesh)),
+        donate_argnums=(1,))
+    return step, pstruct, cstruct, batch_struct
+
+
+# ---------------------------------------------------------------------------
+# sharded jit wrappers
+# ---------------------------------------------------------------------------
+
+
+def train_state_specs(cfg: ModelConfig, pspecs, mesh, pstruct,
+                      zero: bool = True):
+    """Optimizer m/v inherit param specs; with ``zero`` the *data* axes
+    additionally shard the first unsharded, divisible dim of every large
+    state tensor (ZeRO-1-style optimizer-state sharding — Adam moments
+    never need to be replicated across data parallel replicas)."""
+    if not zero:
+        opt = {"m": pspecs, "v": pspecs, "step": P()}
+        return {"params": pspecs, "opt": opt}
+
+    dp_all = sh.batch_axes_for(cfg, mesh, "train")
+    dp = dp_all if len(dp_all) > 1 else dp_all[0]
+    dsz = 1
+    for a in (dp_all if isinstance(dp_all, tuple) else (dp_all,)):
+        dsz *= mesh.shape[a]
+
+    dp_set = set(dp_all if isinstance(dp_all, tuple) else (dp_all,))
+
+    def zero_one(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        shape = leaf.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        if int(np.prod(shape)) < (1 << 20):       # skip small tensors
+            return spec
+        used = set()
+        for axis in parts:
+            for a in (axis if isinstance(axis, tuple) else (axis,)):
+                if a is not None:
+                    used.add(a)
+        if used & dp_set:
+            return spec       # data axes already shard this tensor (EP-data)
+        for i, axis in enumerate(parts):
+            if axis is None and shape[i] % dsz == 0 and shape[i] >= dsz:
+                parts[i] = dp
+                return P(*parts)
+        return spec
+
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_struct = treedef.flatten_up_to(pstruct)
+    zspecs = treedef.unflatten([zero_one(s, l) for s, l in
+                                zip(flat_specs, flat_struct)])
+    opt = {"m": zspecs, "v": zspecs, "step": P()}
+    return {"params": pspecs, "opt": opt}
+
+
+def pick_microbatches(cell: ShapeCell, mesh, target_rows_per_dev: int = 2,
+                      cfg=None) -> int:
+    """Largest k such that batch splits evenly and each microbatch puts
+    ~target rows on each data shard."""
+    if cfg is not None and cfg.train_shard == "dp":
+        dsz = 1
+        for a in mesh.axis_names:
+            dsz *= mesh.shape[a]
+    else:
+        dsz = sh._dp_size(mesh)
+    rows_per_dev = max(cell.global_batch // dsz, 1)
+    k = max(rows_per_dev // target_rows_per_dev, 1)
+    while cell.global_batch % (k * dsz) and k > 1:
+        k -= 1
+    return k
+
+
+def jit_train_step(model: Model, mesh, ocfg: adamw.AdamWConfig,
+                   cell: ShapeCell, zero: bool = True,
+                   microbatches: int = 0):
+    """Returns (jitted step, state_struct, batch_struct, shardings)."""
+    cfg = model.cfg
+    if microbatches <= 0:
+        microbatches = pick_microbatches(cell, mesh, cfg=model.cfg)
+    pstruct = params_struct(model)
+    ostruct = jax.eval_shape(adamw.init_state, pstruct)
+    state_struct = {"params": pstruct, "opt": ostruct}
+    batch_struct = input_specs(cfg, cell)
+
+    pspecs = sh.param_specs(cfg, pstruct, mesh, mode="train")
+    sspecs = train_state_specs(cfg, pspecs, mesh, pstruct, zero=zero)
+    bspecs = sh.data_specs(cfg, batch_struct, mesh, mode="train")
+
+    s_shard = sh.to_shardings(sspecs, mesh)
+    b_shard = sh.to_shardings(bspecs, mesh)
+    metric_shard = {"lr": NamedSharding(mesh, P()),
+                    "grad_norm": NamedSharding(mesh, P()),
+                    "step": NamedSharding(mesh, P()),
+                    "loss": NamedSharding(mesh, P())}
+
+    step = jax.jit(make_train_step(model, ocfg, microbatches),
+                   in_shardings=(s_shard, b_shard),
+                   out_shardings=(s_shard, metric_shard),
+                   donate_argnums=(0,))
+    return step, state_struct, batch_struct, (s_shard, b_shard)
+
+
+def jit_prefill_step(model: Model, mesh, cell: ShapeCell,
+                     quantized: bool = True,
+                     policy: Optional[QuantPolicy] = None):
+    cfg = model.cfg
+    pstruct = params_struct(model, quantized=quantized, policy=policy)
+    batch_struct = input_specs(cfg, cell)
+    cstruct = cache_struct(model, cell)
+
+    pspecs = sh.param_specs(cfg, pstruct, mesh, mode="serve")
+    bspecs = sh.data_specs(cfg, batch_struct, mesh, mode="serve")
+    cspecs = sh.cache_specs(cfg, cstruct, mesh)
+
+    bdim = cell.global_batch
+    bspec = sh.dp_axes(mesh) if bdim % sh._dp_size(mesh) == 0 else None
+    vspec = "model" if cfg.padded_vocab() % mesh.shape["model"] == 0 else None
+    logits_spec = P(bspec, vspec)                # (B, V@model)
+
+    step = jax.jit(
+        make_prefill_step(model, cell.seq_len),
+        in_shardings=(sh.to_shardings(pspecs, mesh),
+                      sh.to_shardings(bspecs, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_spec),
+                       sh.to_shardings(cspecs, mesh)))
+    return step, pstruct, batch_struct
+
+
+def jit_serve_step(model: Model, mesh, cell: ShapeCell,
+                   quantized: bool = True,
+                   policy: Optional[QuantPolicy] = None):
+    cfg = model.cfg
+    pstruct = params_struct(model, quantized=quantized, policy=policy)
+    batch_struct = input_specs(cfg, cell)
+    cstruct = cache_struct(model, cell)
+
+    pspecs = sh.param_specs(cfg, pstruct, mesh, mode="serve")
+    cspecs = sh.cache_specs(cfg, cstruct, mesh)
+    dp = sh.dp_axes(mesh)
+    bdim = batch_struct["tokens"].shape[0]
+    bspec = dp if bdim % sh._dp_size(mesh) == 0 else None  # long_500k: B=1
+    vspec = "model" if cfg.padded_vocab() % mesh.shape["model"] == 0 else None
+    tok_shard = NamedSharding(mesh, P(bspec))
+    logits_spec = NamedSharding(mesh, P(bspec, vspec))
+
+    step = jax.jit(
+        make_serve_step(model),
+        in_shardings=(sh.to_shardings(pspecs, mesh),
+                      sh.to_shardings(cspecs, mesh), tok_shard),
+        out_shardings=(logits_spec, sh.to_shardings(cspecs, mesh)),
+        donate_argnums=(1,))
+    return step, pstruct, cstruct, batch_struct

@@ -1,0 +1,128 @@
+"""Training launcher: end-to-end driver with checkpoint/restart, heartbeat,
+straggler tracking, and (simulated) elastic recovery.
+
+On this container it runs a reduced config on the host mesh; on a real
+cluster the same file runs per-host with ``jax.distributed.initialize``
+(the mesh/runtime objects are identical — see runtime/health.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama2-110m \
+      --steps 200 --reduced --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, SyntheticTinyStories
+from repro.launch import mesh as meshlib
+from repro.launch import steps as steplib
+from repro.configs.base import ShapeCell
+from repro.models.model import build_model, count_params
+from repro.optim import adamw
+from repro.runtime.health import HeartbeatMonitor, StragglerDetector
+
+
+def run(arch: str = "llama2-110m", steps: int = 100, batch: int = 8,
+        seq: int = 256, use_reduced: bool = True, ckpt_dir: str = "",
+        ckpt_every: int = 50, seed: int = 0, log_every: int = 10,
+        microbatches: int = 1, grad_compress: bool = False):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduced(cfg)
+    model = build_model(cfg)
+    mesh = meshlib.make_host_mesh()
+    cell = ShapeCell("custom", seq, batch, "train")
+    ocfg = adamw.AdamWConfig(warmup_steps=min(20, steps // 5 + 1),
+                             decay_steps=max(steps, 2),
+                             grad_compress_bits=8 if grad_compress else 0)
+
+    with mesh:
+        step_fn, state_struct, _, (s_shard, _) = steplib.jit_train_step(
+            model, mesh, ocfg, cell, zero=False, microbatches=microbatches)
+
+        data = SyntheticTinyStories(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq, batch_size=batch,
+            seed=seed))
+        it = data.batches()
+
+        start_step = 0
+        if ckpt_dir and store.latest_step(ckpt_dir) is not None:
+            state_np, start_step, extra = store.restore(ckpt_dir, state_struct)
+            state = jax.device_put(state_np, s_shard)
+            if "data_state" in extra:
+                data.restore(extra["data_state"])
+            print(f"[train] resumed from step {start_step}")
+        else:
+            params = model.init(jax.random.PRNGKey(seed))
+            state = {"params": params, "opt": adamw.init_state(params)}
+            state = jax.device_put(state, s_shard)
+
+        hb = HeartbeatMonitor(n_hosts=jax.process_count())
+        straggle = StragglerDetector(n_hosts=jax.process_count())
+        n_params = count_params(state_struct["params"])
+        print(f"[train] {arch}: {n_params/1e6:.1f}M params, "
+              f"{steps} steps, batch {batch} x seq {seq}")
+
+        losses = []
+        writer = None
+        for s in range(start_step, steps):
+            t0 = time.perf_counter()
+            batch_np = next(it)
+            state, metrics = step_fn(state, batch_np)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            hb.beat(jax.process_index(), s)
+            straggle.record(jax.process_index(), dt)
+            if s % log_every == 0 or s == steps - 1:
+                tok_s = batch * seq / dt
+                print(f"[train] step {s:5d} loss {loss:8.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{tok_s:,.0f} tok/s", flush=True)
+            if ckpt_dir and (s + 1) % ckpt_every == 0:
+                if writer is not None:
+                    writer.join()
+                writer = store.save(
+                    ckpt_dir, s + 1, state,
+                    extra={"data_state": data.state(), "loss": loss},
+                    async_=True)
+        if writer is not None:
+            writer.join()
+        if ckpt_dir:
+            store.prune(ckpt_dir)
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-110m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.set_defaults(reduced=True)
+    args = ap.parse_args()
+    losses = run(args.arch, args.steps, args.batch, args.seq, args.reduced,
+                 args.ckpt_dir, args.ckpt_every,
+                 microbatches=args.microbatches,
+                 grad_compress=args.grad_compress)
+    print(f"[train] final loss {losses[-1]:.4f} "
+          f"(start {losses[0]:.4f}, min {min(losses):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: dense / MoE / SSM / hybrid / VLM / enc-dec backbones."""
+
+from repro.models.model import Model, build_model, count_params
+
+__all__ = ["Model", "build_model", "count_params"]

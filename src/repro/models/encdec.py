@@ -1,0 +1,288 @@
+"""Whisper-style encoder–decoder backbone (audio family).
+
+Per the assignment, the conv frontend is a STUB: inputs are precomputed
+frame embeddings (B, enc_seq, D).  The transformer backbone is real:
+bidirectional encoder (LayerNorm + GELU, MHA) and a causal decoder with
+self- and cross-attention, learned decoder positions, tied LM head.
+
+Serving keeps two caches: the growing self-attention KV cache and the
+fixed cross-attention KV computed once from the encoder output — both are
+int8-quantizable like the decoder-only models.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qdot, qeinsum
+from repro.models import layers as L
+from repro.models.transformer import (_cdt, _init_attn, _init_mlp,
+                                      _init_norm, _kv_int8, _maybe_remat,
+                                      _pdt, _quantize_kv, _store_kv)
+
+Params = Any
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": _init_norm(cfg), "attn": _init_attn(k1, cfg),
+            "norm2": _init_norm(cfg), "mlp": _init_mlp(k2, cfg)}
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": _init_norm(cfg), "attn": _init_attn(k1, cfg),
+            "norm_x": _init_norm(cfg), "cross": _init_attn(k2, cfg),
+            "norm2": _init_norm(cfg), "mlp": _init_mlp(k3, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kd, kemb, kpe, kpd = jax.random.split(key, 5)
+    dt = _pdt(cfg)
+    enc_keys = jax.random.split(ke, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(kemb, (cfg.padded_vocab(), cfg.d_model))
+                  * 0.02).astype(dt),
+        "enc_pos": (jax.random.normal(kpe, (cfg.enc_seq, cfg.d_model))
+                    * 0.02).astype(jnp.float32),
+        "dec_pos": (jax.random.normal(kpd, (cfg.max_pos, cfg.d_model))
+                    * 0.02).astype(jnp.float32),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "enc_final_norm": _init_norm(cfg),
+        "final_norm": _init_norm(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, S_enc, D) stub embeddings -> encoder hidden states."""
+    s = frames.shape[1]
+    x = frames.astype(_cdt(cfg)) + params["enc_pos"][:s].astype(_cdt(cfg))
+
+    def body(h, lp):
+        a, _ = _enc_attn(lp, h, cfg)
+        h = h + a
+        h = h + L.gelu_mlp(lp["mlp"], L.apply_norm(h, lp["norm2"],
+                                                   cfg.norm_type, cfg.eps))
+        return h, None
+
+    body = _maybe_remat(body, cfg)
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(x, params["enc_final_norm"], cfg.norm_type, cfg.eps)
+
+
+def _enc_attn(p, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    q = qeinsum("bsd,hkd->bshk", h, p["attn"]["wq"]) * (hd ** -0.5)
+    k = qeinsum("bsd,hkd->bshk", h, p["attn"]["wk"])
+    v = qeinsum("bsd,hkd->bshk", h, p["attn"]["wv"])
+    acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd, causal=False,
+                        q_chunk=cfg.q_chunk)
+    out = L.attention_scores_blockwise(q, k, v, acfg)
+    out = qeinsum("bshk,dhk->bsd", out, p["attn"]["wo"])
+    return out.astype(x.dtype), None
+
+
+# ---------------------------------------------------------------------------
+# decoder — full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(p, enc_hidden, cfg: ModelConfig):
+    b, se, _ = enc_hidden.shape
+    hd = cfg.hd()
+    k = qeinsum("bsd,hkd->bshk", enc_hidden, p["cross"]["wk"])
+    v = qeinsum("bsd,hkd->bshk", enc_hidden, p["cross"]["wv"])
+    return k, v
+
+
+def _dec_block_seq(p, x, enc_hidden, cfg: ModelConfig, collect: bool):
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    # self attention (causal)
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    q = qeinsum("bsd,hkd->bshk", h, p["attn"]["wq"]) * (hd ** -0.5)
+    k = qeinsum("bsd,hkd->bshk", h, p["attn"]["wk"])
+    v = qeinsum("bsd,hkd->bshk", h, p["attn"]["wv"])
+    acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd, causal=True,
+                        q_chunk=cfg.q_chunk)
+    a = L.attention_scores_blockwise(q, k, v, acfg)
+    x = x + qeinsum("bshk,dhk->bsd", a, p["attn"]["wo"]).astype(x.dtype)
+
+    # cross attention (non-causal, to encoder states)
+    hx = L.apply_norm(x, p["norm_x"], cfg.norm_type, cfg.eps)
+    qx = qeinsum("bsd,hkd->bshk", hx, p["cross"]["wq"]) * (hd ** -0.5)
+    kx, vx = _cross_kv(p, enc_hidden, cfg)
+    xcfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd, causal=False,
+                        q_chunk=cfg.q_chunk)
+    cx = L.attention_scores_blockwise(qx, kx, vx, xcfg)
+    x = x + qeinsum("bshk,dhk->bsd", cx, p["cross"]["wo"]).astype(x.dtype)
+
+    # mlp
+    x = x + L.gelu_mlp(p["mlp"], L.apply_norm(x, p["norm2"], cfg.norm_type,
+                                              cfg.eps))
+    kv = (k, v, kx, vx) if collect else None
+    return x, kv
+
+
+def decoder_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   enc_hidden: jax.Array, collect_cache: bool = False):
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
+    x = x + params["dec_pos"][:s].astype(_cdt(cfg))
+
+    def body(h, lp):
+        h2, kv = _dec_block_seq(lp, h, enc_hidden, cfg, collect_cache)
+        return h2, kv
+
+    body = _maybe_remat(body, cfg)
+    x, kvs = lax.scan(body, x, params["dec_blocks"])
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+    return x, kvs
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            chunk: int = 512) -> jax.Array:
+    """batch: frames (B, S_enc, D), tokens (B, S), labels (B, S)."""
+    enc_hidden = encode(params, cfg, batch["frames"])
+    hidden, _ = decoder_hidden(params, cfg, batch["tokens"], enc_hidden)
+    labels = batch["labels"]
+    b, s = labels.shape
+    w = params["embed"]
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    hs = jnp.moveaxis(hidden.reshape(b, s // c, c, cfg.d_model), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, s // c, c), 1, 0)
+
+    def ce_chunk(carry, inp):
+        h, y = inp
+        logits = L.lm_head(w, h)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - tgt), None
+
+    ce_chunk = _maybe_remat(ce_chunk, cfg)
+    total, _ = lax.scan(ce_chunk, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
+    hd = cfg.hd()
+    kvd = jnp.int8 if _kv_int8(cfg) else _cdt(cfg)
+    nl = cfg.n_layers
+
+    def buf(seq):
+        c = {"k": jnp.zeros((nl, batch, seq, cfg.n_kv_heads, hd), kvd),
+             "v": jnp.zeros((nl, batch, seq, cfg.n_kv_heads, hd), kvd)}
+        if _kv_int8(cfg):
+            c["ks"] = jnp.zeros((nl, batch, seq, cfg.n_kv_heads), jnp.float32)
+            c["vs"] = jnp.zeros_like(c["ks"])
+        return c
+
+    return {"lens": jnp.zeros((batch,), jnp.int32),
+            "self": buf(max_seq), "cross": buf(cfg.enc_seq)}
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    """Encode audio, teacher-force the prompt tokens, build both caches."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    enc_hidden = encode(params, cfg, batch["frames"])
+    hidden, kvs = decoder_hidden(params, cfg, tokens, enc_hidden,
+                                 collect_cache=True)
+    k, v, kx, vx = kvs
+    cache = init_cache(cfg, b, max_seq)
+    cache["lens"] = jnp.full((b,), s, jnp.int32)
+    int8 = _kv_int8(cfg)
+
+    def fill(dst, kk, vv, upto):
+        dst = dict(dst)
+        if int8:
+            kq, ks = _quantize_kv(kk)
+            vq, vs = _quantize_kv(vv)
+            dst["k"] = dst["k"].at[:, :, :upto].set(kq)
+            dst["v"] = dst["v"].at[:, :, :upto].set(vq)
+            dst["ks"] = dst["ks"].at[:, :, :upto].set(ks)
+            dst["vs"] = dst["vs"].at[:, :, :upto].set(vs)
+        else:
+            dst["k"] = dst["k"].at[:, :, :upto].set(kk.astype(dst["k"].dtype))
+            dst["v"] = dst["v"].at[:, :, :upto].set(vv.astype(dst["v"].dtype))
+        return dst
+
+    cache["self"] = fill(cache["self"], k, v, s)
+    cache["cross"] = fill(cache["cross"], kx, vx, kx.shape[2])
+    logits = L.lm_head(params["embed"], hidden[:, -1])
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
+                tokens: jax.Array, positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Cache]:
+    b = tokens.shape[0]
+    pos = cache["lens"] if positions is None else positions
+    hd = cfg.hd()
+    int8 = _kv_int8(cfg)
+    x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
+    x = x + params["dec_pos"][pos].astype(_cdt(cfg))
+    enc_len = cache["cross"]["k"].shape[2]
+
+    def body(h, inp):
+        lp, (self_c, cross_c) = inp
+        hh = L.apply_norm(h, lp["norm1"], cfg.norm_type, cfg.eps)
+        q = qeinsum("bd,hkd->bhk", hh, lp["attn"]["wq"])
+        k = qeinsum("bd,hkd->bhk", hh, lp["attn"]["wk"])
+        v = qeinsum("bd,hkd->bhk", hh, lp["attn"]["wv"])
+        self_c = _store_kv(self_c, k, v, pos, int8)
+        acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd)
+        a = L.attention_decode(q * (hd ** -0.5), self_c["k"], self_c["v"],
+                               pos + 1, acfg, self_c.get("ks"),
+                               self_c.get("vs"))
+        h = h + qeinsum("bhk,dhk->bd", a, lp["attn"]["wo"]).astype(h.dtype)
+
+        hx = L.apply_norm(h, lp["norm_x"], cfg.norm_type, cfg.eps)
+        qx = qeinsum("bd,hkd->bhk", hx, lp["cross"]["wq"])
+        cx = L.attention_decode(qx * (hd ** -0.5), cross_c["k"], cross_c["v"],
+                                enc_len, acfg, cross_c.get("ks"),
+                                cross_c.get("vs"))
+        h = h + qeinsum("bhk,dhk->bd", cx, lp["cross"]["wo"]).astype(h.dtype)
+        h = h + L.gelu_mlp(lp["mlp"],
+                           L.apply_norm(h, lp["norm2"], cfg.norm_type,
+                                        cfg.eps))
+        return h, (self_c, cross_c)
+
+    x, (new_self, new_cross) = lax.scan(
+        body, x, (params["dec_blocks"], (cache["self"], cache["cross"])))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+    logits = L.lm_head(params["embed"], x)
+    new_cache = dict(cache)
+    new_cache["self"] = new_self
+    new_cache["cross"] = new_cross
+    new_cache["lens"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,67 @@
+"""Model facade: one entry point per architecture family.
+
+``build_model(cfg)`` returns a ``Model`` bundle of pure functions with a
+uniform signature across all 10 assigned architectures, so the launcher,
+serving stack, dry-run and tests never branch on family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import QuantPolicy, quantize_params
+from repro.models import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, Dict[str, Any]], jax.Array]
+    prefill: Callable[..., Tuple[jax.Array, Any]]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+
+    def quantize(self, params, policy: Optional[QuantPolicy] = None):
+        """Post-training quantization (the paper's §3.2 flow)."""
+        return quantize_params(params, policy or QuantPolicy())
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=lambda p, b: encdec.lm_loss(p, cfg, b),
+            prefill=lambda p, b, **kw: encdec.prefill(p, cfg, b, **kw),
+            decode_step=lambda p, c, t, **kw: encdec.decode_step(
+                p, cfg, c, t, **kw),
+            init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss=lambda p, b: transformer.lm_loss(p, cfg, b),
+        prefill=lambda p, b, **kw: transformer.prefill(p, cfg, b, **kw),
+        decode_step=lambda p, c, t, **kw: transformer.decode_step(
+            p, cfg, c, t, **kw),
+        init_cache=lambda bsz, seq: transformer.init_cache(cfg, bsz, seq),
+    )
+
+
+def count_params(params) -> int:
+    import math
+    from repro.core.quantization import QuantizedTensor
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, QuantizedTensor)):
+        if isinstance(leaf, QuantizedTensor):
+            total += math.prod(leaf.shape)     # python ints: no overflow
+        else:
+            total += math.prod(leaf.shape) if leaf.shape else 1
+    return total

@@ -1,0 +1,623 @@
+"""Decoder-only LM covering dense / MoE / SSM / hybrid / VLM families.
+
+One functional model, driven entirely by ``ModelConfig``:
+
+  * params are *stacked per layer* and iterated with ``lax.scan`` — the HLO
+    stays one-block-sized regardless of depth (critical for the 512-device
+    dry-run compiles on this 1-CPU container, and for TPU compile times),
+  * every weight leaf may be a float array (training) or a
+    ``QuantizedTensor`` (post-training-quantized serving) — ``qdot``
+    dispatches, so the paper's PTQ flow reuses the same forward code,
+  * decode keeps a KV cache that is optionally Q8_0-quantized per
+    (position, kv-head) — the beyond-paper extension that matters at 32k+.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.qlinear import qdot, qeinsum
+from repro.models import layers as L
+from repro.models import ssm as S
+
+Params = Any
+Cache = Dict[str, Any]
+
+
+def _cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg: ModelConfig):
+    p = {"gamma": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["beta"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _init_attn(key, cfg: ModelConfig):
+    """Head-structured weights: (H, hd, D) / (D, H, hd).
+
+    Keeping the head axis explicit lets the `model` mesh axis shard heads
+    directly (GSPMD pads non-divisible head counts) instead of resharding a
+    flat H*hd dim whose shard boundaries cut through heads.
+    """
+    hd = cfg.hd()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = _pdt(cfg)
+    sc = 1.0 / (cfg.d_model ** 0.5)
+    so = 1.0 / ((cfg.n_heads * hd) ** 0.5)
+    return {
+        "wq": (jax.random.normal(k1, (cfg.n_heads, hd, cfg.d_model)) * sc).astype(dt),
+        "wk": (jax.random.normal(k2, (cfg.n_kv_heads, hd, cfg.d_model)) * sc).astype(dt),
+        "wv": (jax.random.normal(k3, (cfg.n_kv_heads, hd, cfg.d_model)) * sc).astype(dt),
+        "wo": (jax.random.normal(k4, (cfg.d_model, cfg.n_heads, hd)) * so).astype(dt),
+    }
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _pdt(cfg)
+    if cfg.mlp_type == "gelu":
+        return {"w1": L.dense_init(k1, cfg.d_ff, cfg.d_model, dt),
+                "w2": L.dense_init(k2, cfg.d_model, cfg.d_ff, dt)}
+    return {"w1": L.dense_init(k1, cfg.d_ff, cfg.d_model, dt),
+            "w3": L.dense_init(k3, cfg.d_ff, cfg.d_model, dt),
+            "w2": L.dense_init(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def _init_moe(key, cfg: ModelConfig):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    dt = _pdt(cfg)
+    e, f, d = cfg.n_experts, cfg.d_ff, cfg.d_model
+    scale = 1.0 / (d ** 0.5)
+    return {
+        "router": (jax.random.normal(k0, (e, d)) * scale).astype(jnp.float32),
+        "w1": (jax.random.normal(k1, (e, f, d)) * scale).astype(dt),
+        "w3": (jax.random.normal(k3, (e, f, d)) * scale).astype(dt),
+        "w2": (jax.random.normal(k2, (e, d, f)) * (1.0 / f ** 0.5)).astype(dt),
+    }
+
+
+def _init_dense_block(key, cfg: ModelConfig, moe: bool):
+    k1, k2 = jax.random.split(key)
+    blk = {"norm1": _init_norm(cfg), "attn": _init_attn(k1, cfg),
+           "norm2": _init_norm(cfg)}
+    if moe:
+        blk["moe"] = _init_moe(k2, cfg)
+    else:
+        blk["mlp"] = _init_mlp(k2, cfg)
+    return blk
+
+
+def _ssm_dims(cfg: ModelConfig) -> S.SSMDims:
+    return S.make_ssm_dims(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                           cfg.ssm_head_dim, cfg.ssm_groups, cfg.conv_width)
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    return {"norm1": _init_norm(cfg),
+            "ssm": S.init_mamba2_params(key, _ssm_dims(cfg), _pdt(cfg))}
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    kemb, kblocks, khead, kattn = jax.random.split(key, 4)
+    dt = _pdt(cfg)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(kemb, (cfg.padded_vocab(), cfg.d_model))
+                  * 0.02).astype(dt),
+        "final_norm": _init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(khead, cfg.padded_vocab(),
+                                         cfg.d_model, dt)
+
+    fam = cfg.family
+    if fam == "moe" and cfg.moe_every > 1:
+        # llama4-style interleave: pattern = [dense x (k-1), moe], repeated.
+        n_pat = cfg.n_layers // cfg.moe_every
+        kd, km = jax.random.split(kblocks)
+        dkeys = jax.random.split(kd, n_pat * (cfg.moe_every - 1))
+        dkeys = dkeys.reshape((n_pat, cfg.moe_every - 1) + dkeys.shape[1:])
+        mkeys = jax.random.split(km, n_pat)
+        params["blocks_dense"] = jax.vmap(jax.vmap(
+            lambda k: _init_dense_block(k, cfg, moe=False)))(dkeys)
+        params["blocks_moe"] = jax.vmap(
+            lambda k: _init_dense_block(k, cfg, moe=True))(mkeys)
+    elif fam in ("dense", "vlm", "moe"):
+        keys = jax.random.split(kblocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_dense_block(k, cfg, moe=(fam == "moe")))(keys)
+    elif fam == "ssm":
+        keys = jax.random.split(kblocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _init_ssm_block(k, cfg))(keys)
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        n_main = n_super * cfg.attn_every
+        keys = jax.random.split(kblocks, cfg.n_layers)
+        all_blocks = jax.vmap(lambda k: _init_ssm_block(k, cfg))(keys)
+        params["blocks_main"] = jax.tree_util.tree_map(
+            lambda x: x[:n_main].reshape(n_super, cfg.attn_every, *x.shape[1:]),
+            all_blocks)
+        params["blocks_tail"] = jax.tree_util.tree_map(
+            lambda x: x[n_main:], all_blocks)
+        params["shared_attn"] = _init_dense_block(kattn, cfg, moe=False)
+    else:
+        raise ValueError(f"family {fam} not built here (audio -> encdec.py)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# rope helpers
+# ---------------------------------------------------------------------------
+
+
+def _rope_cos_sin(cfg: ModelConfig, positions: jax.Array):
+    """positions: (B, S) for rope, (3, B, S) for mrope; None for 'none'."""
+    if cfg.rope_type == "none":
+        return None
+    hd = cfg.hd()
+    if cfg.rope_type == "mrope":
+        cos, sin = L.mrope_angles(positions, hd, cfg.rope_theta,
+                                  tuple(cfg.mrope_sections))
+    else:
+        cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+    return cos, sin
+
+
+# ---------------------------------------------------------------------------
+# blocks — full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_seq(p, x, cfg: ModelConfig, rope_cs, *, causal=True,
+              return_kv=False):
+    """x (B, S, D) -> (out, (k, v))."""
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    q = qeinsum("bsd,hkd->bshk", h, p["attn"]["wq"])
+    k = qeinsum("bsd,hkd->bshk", h, p["attn"]["wk"])
+    v = qeinsum("bsd,hkd->bshk", h, p["attn"]["wv"])
+    if rope_cs is not None:
+        cos, sin = rope_cs                                  # (B, S, hd)
+        q = L.apply_rope(q, cos[:, :, None], sin[:, :, None])
+        k = L.apply_rope(k, cos[:, :, None], sin[:, :, None])
+    q = q * (hd ** -0.5)
+    acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd, causal=causal,
+                        q_chunk=cfg.q_chunk)
+    out = L.attention_scores_blockwise(q, k, v, acfg)
+    out = qeinsum("bshk,dhk->bsd", out, p["attn"]["wo"])
+    return out.astype(x.dtype), ((k, v) if return_kv else None)
+
+
+def _mlp_or_moe(p, x, cfg: ModelConfig, decode: bool = False):
+    h = L.apply_norm(x, p["norm2"], cfg.norm_type, cfg.eps)
+    if "moe" in p:
+        return L.moe_mlp(p["moe"], h, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, group_size=cfg.moe_group,
+                         capacity_factor=cfg.capacity_factor,
+                         dense_dispatch=decode).astype(x.dtype)
+    if cfg.mlp_type == "gelu":
+        return L.gelu_mlp(p["mlp"], h)
+    return L.swiglu_mlp(p["mlp"], h)
+
+
+def _dense_block_seq(p, x, cfg: ModelConfig, rope_cs, causal=True,
+                     return_kv=False):
+    a, kv = _attn_seq(p, x, cfg, rope_cs, causal=causal, return_kv=return_kv)
+    x = x + a
+    x = x + _mlp_or_moe(p, x, cfg)
+    return x, kv
+
+
+def _ssm_block_seq(p, x, cfg: ModelConfig, conv_state=None, ssm_state=None):
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    y, (new_conv, new_ssm) = S.mamba2_forward(
+        p["ssm"], h, _ssm_dims(cfg), cfg.ssm_chunk, conv_state, ssm_state)
+    return x + y, (new_conv, new_ssm)
+
+
+# ---------------------------------------------------------------------------
+# backbone — full sequence
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if cfg.remat == "dots":
+        # selective: keep matmul outputs, recompute elementwise — trades
+        # ~(B,S,D)-sized residuals per matmul for skipping the recompute
+        # of every projection in the backward pass (§Perf lever for
+        # compute-dominant train cells)
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array, collect_cache: bool = False):
+    """x: (B, S, D) input embeddings -> (hidden (B,S,D), cache_parts)."""
+    rope_cs = _rope_cos_sin(cfg, positions)
+    fam = cfg.family
+
+    if fam == "moe" and cfg.moe_every > 1:
+        def one(h, lp):
+            h2, kv = _dense_block_seq(lp, h, cfg, rope_cs,
+                                      return_kv=collect_cache)
+            return h2, kv
+        one = _maybe_remat(one, cfg)
+
+        def pat_body(h, lps):
+            lp_dense, lp_moe = lps
+            h, kvd = lax.scan(one, h, lp_dense)
+            h, kvm = one(h, lp_moe)
+            return h, (kvd, kvm)
+        x, cache = lax.scan(pat_body, x,
+                            (params["blocks_dense"], params["blocks_moe"]))
+
+    elif fam in ("dense", "vlm", "moe"):
+        def body(h, lp):
+            h2, kv = _dense_block_seq(lp, h, cfg, rope_cs,
+                                      return_kv=collect_cache)
+            return h2, kv
+        body = _maybe_remat(body, cfg)
+        x, kvs = lax.scan(body, x, params["blocks"])
+        cache = kvs                                  # ((L,B,S,KVH,hd) x2) | None
+
+    elif fam == "ssm":
+        def body(h, lp):
+            h2, (cs, ss) = _ssm_block_seq(lp, h, cfg)
+            return h2, (cs, ss) if collect_cache else None
+        body = _maybe_remat(body, cfg)
+        x, cache = lax.scan(body, x, params["blocks"])
+
+    elif fam == "hybrid":
+        def inner(h, lp):
+            h2, st = _ssm_block_seq(lp, h, cfg)
+            return h2, st if collect_cache else None
+        inner = _maybe_remat(inner, cfg)
+        shared = params["shared_attn"]
+
+        def super_body(h, lp_super):
+            h, ssm_sts = lax.scan(inner, h, lp_super)
+            h, kv = _dense_block_seq(shared, h, cfg, rope_cs,
+                                     return_kv=collect_cache)
+            return h, (ssm_sts, kv)
+        super_body = _maybe_remat(super_body, cfg)
+        x, (main_sts, attn_kvs) = lax.scan(super_body, x,
+                                           params["blocks_main"])
+        x, tail_sts = lax.scan(inner, x, params["blocks_tail"])
+        cache = (main_sts, attn_kvs, tail_sts)
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+    return x, cache
+
+
+def _head_weight(params: Params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]
+                 ) -> jax.Array:
+    """tokens -> embeddings; VLM/audio batches carry precomputed embeds
+    (the modality frontend is a stub per the assignment)."""
+    if "embeds" in batch:
+        return batch["embeds"].astype(_cdt(cfg))
+    return L.embed_lookup(params["embed"], batch["tokens"]).astype(_cdt(cfg))
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int, batch):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to(pos, (3, b, s))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked cross-entropy — logits never materialize at (B,S,V))
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            chunk: int = 512) -> jax.Array:
+    tokens_in = batch.get("tokens")
+    labels = batch["labels"]                        # (B, S) int32
+    b, s = labels.shape
+    positions = _default_positions(cfg, b, s, batch)
+    x = embed_inputs(params, cfg, batch)
+    hidden, _ = forward_hidden(params, cfg, x, positions)
+    w = _head_weight(params, cfg)
+
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    hs = hidden.reshape(b, s // c, c, cfg.d_model)
+    ls = labels.reshape(b, s // c, c)
+
+    def ce_chunk(carry, inp):
+        h, y = inp                                  # (B,c,D), (B,c)
+        logits = L.lm_head(w, h)                    # (B,c,V) f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - tgt), None
+
+    ce_chunk = _maybe_remat(ce_chunk, cfg)
+    total, _ = lax.scan(ce_chunk, jnp.zeros((), jnp.float32),
+                        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ls, 1, 0)))
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _kv_int8(cfg: ModelConfig) -> bool:
+    return cfg.kv_cache_dtype == "int8"
+
+
+def _quantize_kv(vec: jax.Array):
+    """vec (..., hd) -> int8 codes + one f32 scale per vector (group=hd)."""
+    absmax = jnp.max(jnp.abs(vec.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
+    q = jnp.clip(jnp.round(vec * inv), -127, 127).astype(jnp.int8)
+    return q, (absmax[..., 0] / 127.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
+    hd = cfg.hd() if cfg.n_heads else 0      # SSM family: no attention
+    kvd = jnp.int8 if _kv_int8(cfg) else _cdt(cfg)
+    cache: Cache = {"lens": jnp.zeros((batch,), jnp.int32)}
+
+    def attn_cache(n_layers):
+        c = {"k": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), kvd),
+             "v": jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads, hd), kvd)}
+        if _kv_int8(cfg):
+            c["ks"] = jnp.zeros((n_layers, batch, max_seq, cfg.n_kv_heads),
+                                jnp.float32)
+            c["vs"] = jnp.zeros_like(c["ks"])
+        return c
+
+    def ssm_cache(n_layers):
+        d = _ssm_dims(cfg)
+        gn = d.n_groups * d.state
+        w1 = cfg.conv_width - 1
+        conv = (jnp.zeros((n_layers, batch, w1, d.d_inner), jnp.float32),
+                jnp.zeros((n_layers, batch, w1, gn), jnp.float32),
+                jnp.zeros((n_layers, batch, w1, gn), jnp.float32))
+        return {"conv": conv,
+                "state": jnp.zeros((n_layers, batch, d.n_heads, d.head_dim,
+                                    d.state), jnp.float32)}
+
+    fam = cfg.family
+    if fam == "moe" and cfg.moe_every > 1:
+        n_pat = cfg.n_layers // cfg.moe_every
+        full = attn_cache(cfg.n_layers)
+        cache["attn_dense"] = jax.tree_util.tree_map(
+            lambda x: x[: n_pat * (cfg.moe_every - 1)].reshape(
+                n_pat, cfg.moe_every - 1, *x.shape[1:]), full)
+        cache["attn_moe"] = attn_cache(n_pat)
+    elif fam in ("dense", "vlm", "moe"):
+        cache["attn"] = attn_cache(cfg.n_layers)
+    elif fam == "ssm":
+        cache["ssm"] = ssm_cache(cfg.n_layers)
+    elif fam == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        n_main = n_super * cfg.attn_every
+        cache["ssm_main"] = jax.tree_util.tree_map(
+            lambda x: x.reshape(n_super, cfg.attn_every, *x.shape[1:]),
+            ssm_cache(n_main))
+        cache["ssm_tail"] = ssm_cache(cfg.n_layers - n_main)
+        cache["attn"] = attn_cache(n_super)
+    return cache
+
+
+def _store_kv(cache_layer, k, v, pos, int8: bool):
+    """Write (B, KVH, hd) new k/v at per-row positions into (B,S,KVH,hd)."""
+    if int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        upd = {"k": kq, "v": vq, "ks": ks, "vs": vs}
+    else:
+        upd = {"k": k.astype(cache_layer["k"].dtype),
+               "v": v.astype(cache_layer["v"].dtype)}
+
+    def write(buf, new):
+        # buf (B, S, ...), new (B, ...) -> write at pos[b] per row
+        return jax.vmap(
+            lambda bb, nn, pp: lax.dynamic_update_slice_in_dim(
+                bb, nn[None], pp, axis=0))(buf, new, pos)
+
+    return {kk: write(cache_layer[kk], upd[kk]) if kk in upd else cache_layer[kk]
+            for kk in cache_layer}
+
+
+def _attn_decode_layer(p, x, cfg: ModelConfig, lcache, pos, rope_cs):
+    """x (B, D) single position; lcache holds (B,S,KVH,hd) buffers."""
+    b, _ = x.shape
+    hd = cfg.hd()
+    int8 = _kv_int8(cfg)
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    q = qeinsum("bd,hkd->bhk", h, p["attn"]["wq"])
+    k = qeinsum("bd,hkd->bhk", h, p["attn"]["wk"])
+    v = qeinsum("bd,hkd->bhk", h, p["attn"]["wv"])
+    if rope_cs is not None:
+        cos, sin = rope_cs                                   # (B, hd)
+        q = L.apply_rope(q, cos[:, None], sin[:, None])
+        k = L.apply_rope(k, cos[:, None], sin[:, None])
+    lcache = _store_kv(lcache, k, v, pos, int8)
+    acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd)
+    out = L.attention_decode(
+        q * (hd ** -0.5), lcache["k"], lcache["v"], pos + 1, acfg,
+        lcache.get("ks"), lcache.get("vs"))
+    out = qeinsum("bhk,dhk->bd", out, p["attn"]["wo"])
+    x = x + out.astype(x.dtype)
+    x = x + _mlp_or_moe(p, x[:, None, :], cfg, decode=True)[:, 0]
+    return x, lcache
+
+
+def _ssm_decode_layer(p, x, cfg: ModelConfig, conv_state, ssm_state):
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    y, (cs, ss) = S.mamba2_decode_step(p["ssm"], h, _ssm_dims(cfg),
+                                       conv_state, ssm_state)
+    return x + y, (cs, ss)
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
+                tokens: jax.Array, positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Cache]:
+    """tokens (B,) int32 -> (logits (B, V) f32, updated cache)."""
+    b = tokens.shape[0]
+    pos = cache["lens"] if positions is None else positions  # (B,) int32
+    x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
+
+    rp = pos if cfg.rope_type != "mrope" else \
+        jnp.broadcast_to(pos, (3, b))
+    rope_cs = _rope_cos_sin(cfg, rp)
+
+    fam = cfg.family
+    new_cache = dict(cache)
+    if fam == "moe" and cfg.moe_every > 1:
+        def one(h, inp):
+            lp, lc = inp
+            return _attn_decode_layer(lp, h, cfg, lc, pos, rope_cs)
+
+        def pat_body(h, inp):
+            (lp_dense, lp_moe), (lc_dense, lc_moe) = inp
+            h, lc_dense2 = lax.scan(one, h, (lp_dense, lc_dense))
+            h, lc_moe2 = one(h, (lp_moe, lc_moe))
+            return h, (lc_dense2, lc_moe2)
+
+        x, (nd, nm) = lax.scan(
+            pat_body, x,
+            ((params["blocks_dense"], params["blocks_moe"]),
+             (cache["attn_dense"], cache["attn_moe"])))
+        new_cache["attn_dense"] = nd
+        new_cache["attn_moe"] = nm
+
+    elif fam in ("dense", "vlm", "moe"):
+        def body(h, inp):
+            lp, lc = inp
+            h2, lc2 = _attn_decode_layer(lp, h, cfg, lc, pos, rope_cs)
+            return h2, lc2
+        x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
+        new_cache["attn"] = new_attn
+
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, (cs, ss) = inp
+            h2, (cs2, ss2) = _ssm_decode_layer(lp, h, cfg, cs, ss)
+            return h2, (cs2, ss2)
+        x, (ncs, nss) = lax.scan(
+            body, x, (params["blocks"],
+                      (cache["ssm"]["conv"], cache["ssm"]["state"])))
+        new_cache["ssm"] = {"conv": ncs, "state": nss}
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def inner(h, inp):
+            lp, (cs, ss) = inp
+            h2, st = _ssm_decode_layer(lp, h, cfg, cs, ss)
+            return h2, st
+
+        def super_body(h, inp):
+            lp_super, (ssm_c, attn_c) = inp
+            h, ssm_c2 = lax.scan(inner, h, (lp_super, ssm_c))
+            h, attn_c2 = _attn_decode_layer(shared, h, cfg, attn_c, pos,
+                                            rope_cs)
+            return h, (ssm_c2, attn_c2)
+
+        main_sts = (cache["ssm_main"]["conv"], cache["ssm_main"]["state"])
+        x, (nmain, nattn) = lax.scan(
+            super_body, x,
+            (params["blocks_main"], (main_sts, cache["attn"])))
+        x, ntail = lax.scan(
+            inner, x, (params["blocks_tail"],
+                       (cache["ssm_tail"]["conv"], cache["ssm_tail"]["state"])))
+        new_cache["ssm_main"] = {"conv": nmain[0], "state": nmain[1]}
+        new_cache["ssm_tail"] = {"conv": ntail[0], "state": ntail[1]}
+        new_cache["attn"] = nattn
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+    logits = L.lm_head(_head_weight(params, cfg), x)
+    new_cache["lens"] = pos + 1
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+            max_seq: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    """Process a full prompt, build the cache, return last-token logits."""
+    if "embeds" in batch:
+        b, s = batch["embeds"].shape[:2]
+    else:
+        b, s = batch["tokens"].shape
+    max_seq = max_seq or s
+    positions = _default_positions(cfg, b, s, batch)
+    x = embed_inputs(params, cfg, batch)
+    hidden, parts = forward_hidden(params, cfg, x, positions,
+                                   collect_cache=True)
+
+    cache = init_cache(cfg, b, max_seq)
+    cache["lens"] = jnp.full((b,), s, jnp.int32)
+    int8 = _kv_int8(cfg)
+
+    def fill_attn(dst, kv):
+        # k/v buffers: (…lead, S, KVH, hd); scales: (…lead, S, KVH).
+        k, v = kv
+        dst = dict(dst)
+        if int8:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            dst["k"] = dst["k"].at[..., :s, :, :].set(kq)
+            dst["v"] = dst["v"].at[..., :s, :, :].set(vq)
+            dst["ks"] = dst["ks"].at[..., :s, :].set(ks)
+            dst["vs"] = dst["vs"].at[..., :s, :].set(vs)
+            return dst
+        dst["k"] = dst["k"].at[..., :s, :, :].set(k.astype(dst["k"].dtype))
+        dst["v"] = dst["v"].at[..., :s, :, :].set(v.astype(dst["v"].dtype))
+        return dst
+
+    fam = cfg.family
+    if fam == "moe" and cfg.moe_every > 1:
+        kvd, kvm = parts           # (n_pat, me-1, B,S,…) and (n_pat, B,S,…)
+        cache["attn_dense"] = fill_attn(cache["attn_dense"], kvd)
+        cache["attn_moe"] = fill_attn(cache["attn_moe"], kvm)
+    elif fam in ("dense", "vlm", "moe"):
+        cache["attn"] = fill_attn(cache["attn"], parts)
+    elif fam == "ssm":
+        conv, st = parts
+        cache["ssm"] = {"conv": conv, "state": st}
+    elif fam == "hybrid":
+        main_sts, attn_kvs, tail_sts = parts
+        cache["ssm_main"] = {"conv": main_sts[0], "state": main_sts[1]}
+        cache["ssm_tail"] = {"conv": tail_sts[0], "state": tail_sts[1]}
+        cache["attn"] = fill_attn(cache["attn"], attn_kvs)
+
+    logits = L.lm_head(_head_weight(params, cfg), hidden[:, -1])
+    return logits, cache

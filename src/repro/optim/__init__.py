@@ -1,0 +1,3 @@
+"""Optimizers: AdamW with schedule, clipping, int8 grad compression."""
+from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
+                               init_state, lr_schedule)

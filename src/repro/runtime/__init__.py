@@ -1,0 +1,3 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic replanning."""
+from repro.runtime.health import (ElasticPlan, HeartbeatMonitor,
+                                  StragglerDetector, plan_elastic)

@@ -1,0 +1,2 @@
+"""Serving: continuous batching engine + sampling (paper A.1 settings)."""
+from repro.serving.engine import Engine, Request, sample_logits

@@ -1,0 +1,182 @@
+"""Serving engine: continuous batching over the decode step.
+
+The paper serves batch-1 on an FPGA; its §5.2 names batched inference as
+future work.  This engine is that future work: a fixed-slot batch
+(`max_slots`) with continuous batching — finished sequences release their
+slot mid-flight and queued requests are prefilling into it — over the
+quantized decode step.
+
+Sampling matches the paper's evaluation setup: temperature 1.0, top-p
+1.0 (A.1), both configurable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new_tokens: int = 64
+    temperature: float = 1.0
+    top_p: float = 1.0
+    # filled by the engine:
+    output: Optional[List[int]] = None
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+def sample_logits(key, logits: jax.Array, temperature: float = 1.0,
+                  top_p: float = 1.0) -> jax.Array:
+    """Temperature + nucleus sampling; (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        # smallest k with cumulative prob >= top_p
+        keep = csum - probs < top_p
+        thresh = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Single-host continuous-batching engine.
+
+    ``decode_fn(params, cache, tokens) -> (logits, cache)`` and
+    ``prefill_fn(params, batch, max_seq) -> (logits, cache)`` come from
+    the (possibly jitted/sharded) model; the engine itself is pure
+    orchestration and identical whether the steps run on 1 CPU or a pod.
+    """
+
+    def __init__(self, model: Model, params: Any, max_slots: int = 8,
+                 max_seq: int = 1024, eos_id: int = 2, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        # decode is the hot loop: jit once (cache/params structures are
+        # stable).  Donating the cache avoids a copy per token.
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_slots
+        self.cache = model.init_cache(max_slots, max_seq)
+        self.metrics = {"tokens_out": 0, "requests_done": 0,
+                        "decode_steps": 0, "t_decode": 0.0}
+        self._uid = 0
+
+    # -- public API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, **kw) -> int:
+        self._uid += 1
+        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
+                      t_enqueue=time.perf_counter(), output=[], **kw)
+        self.queue.append(req)
+        return req.uid
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            self._admit()
+            if not any(self.slots):
+                if not self.queue:
+                    break
+                continue
+            done.extend(self._decode_once())
+        return done
+
+    # -- internals ------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (one at a time keeps
+        the example simple; a production build batches the prefills)."""
+        for i in range(self.max_slots):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            p = req.prompt[-self.max_seq + req.max_new_tokens:]
+            logits, pcache = self.model.prefill(
+                self.params, {"tokens": p[None, :]},
+                max_seq=self.max_seq)
+            self._merge_slot_cache(i, pcache, len(p))
+            self.key, sub = jax.random.split(self.key)
+            first = sample_logits(sub, logits, req.temperature, req.top_p)
+            req.output.append(int(first[0]))
+            req.t_first_token = time.perf_counter()
+            self.slots[i] = req
+
+    def _merge_slot_cache(self, slot: int, pcache: Any, plen: int) -> None:
+        """Copy a (1, …) prefill cache into slot ``slot`` of the batch
+        cache.  Buffer layouts put batch right after the layer-stack dims,
+        so we match on dim position by name."""
+        def merge(dst, src, path=""):
+            if isinstance(dst, dict):
+                return {k: merge(dst[k], src[k], path + "/" + k)
+                        for k in dst}
+            if isinstance(dst, tuple):
+                return tuple(merge(d, s, path) for d, s in zip(dst, src))
+            if path.endswith("lens"):
+                return dst.at[slot].set(jnp.asarray(plen, dst.dtype))
+            # find the batch dim: it is where shapes differ (src has 1)
+            for ax in range(dst.ndim):
+                if src.shape[ax] == 1 and dst.shape[ax] == self.max_slots:
+                    idx = [slice(None)] * dst.ndim
+                    idx[ax] = slot
+                    return dst.at[tuple(idx)].set(
+                        jnp.squeeze(src, ax).astype(dst.dtype))
+            return dst
+        self.cache = merge(self.cache, pcache)
+
+    def _decode_once(self) -> List[Request]:
+        tokens = np.zeros((self.max_slots,), np.int32)
+        active = np.zeros((self.max_slots,), bool)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                tokens[i] = req.output[-1]
+                active[i] = True
+
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens))
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(sample_logits(sub, logits))
+        self.metrics["decode_steps"] += 1
+        self.metrics["t_decode"] += time.perf_counter() - t0
+
+        finished: List[Request] = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.metrics["tokens_out"] += 1
+            plen = len(req.prompt) + len(req.output)
+            if tok == self.eos_id or len(req.output) >= req.max_new_tokens \
+                    or plen >= self.max_seq - 1:
+                req.t_done = time.perf_counter()
+                finished.append(req)
+                self.metrics["requests_done"] += 1
+                self.slots[i] = None
+                # dead slot: zero its length so attention masks it out
+                self.cache["lens"] = self.cache["lens"].at[i].set(0)
+        return finished
+
+    def throughput_tok_s(self) -> float:
+        t = self.metrics["t_decode"]
+        return self.metrics["tokens_out"] / t if t > 0 else 0.0

@@ -1,0 +1,131 @@
+"""Tests for the roofline analysis tooling — these are load-bearing for
+§Roofline, so they get their own validation against known-good cases."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.launch import flops as flopslib
+from repro.launch import hlo_cost
+from repro.launch.roofline import analytic_bytes, per_device_bytes, tree_bytes
+
+
+class TestFlopsCounter:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        got = flopslib.count_flops(lambda x, y: x @ y, a, b)
+        assert got == 2 * 64 * 128 * 32
+
+    def test_scan_multiplies_length(self):
+        """The exact failure mode of cost_analysis: scans must multiply."""
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+
+        def f(x, ws):
+            def body(h, w):
+                return h @ w, None
+            return lax.scan(body, x, ws)[0]
+
+        got = flopslib.count_flops(f, x, ws)
+        assert got == 10 * 2 * 64 * 64 * 64
+
+    def test_nested_scan(self):
+        x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+        ws = jax.ShapeDtypeStruct((4, 5, 32, 32), jnp.float32)
+
+        def f(x, ws):
+            def outer(h, wgrp):
+                def inner(h2, w):
+                    return h2 @ w, None
+                return lax.scan(inner, h, wgrp)[0], None
+            return lax.scan(outer, x, ws)[0]
+
+        got = flopslib.count_flops(f, x, ws)
+        assert got == 4 * 5 * 2 * 32 ** 3
+
+    def test_grad_counts_backward(self):
+        """VJP roughly triples matmul flops (fwd + two transposes)."""
+        a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        fwd = flopslib.count_flops(lambda x, w: jnp.sum(x @ w), a, w)
+        bwd = flopslib.count_flops(
+            jax.grad(lambda x, w: jnp.sum(x @ w), argnums=(0, 1)), a, w)
+        assert bwd >= 2 * fwd
+
+    def test_batched_dot(self):
+        a = jax.ShapeDtypeStruct((8, 16, 32), jnp.float32)
+        b = jax.ShapeDtypeStruct((8, 32, 4), jnp.float32)
+        got = flopslib.count_flops(
+            lambda x, y: jnp.einsum("bik,bkj->bij", x, y), a, b)
+        assert got == 8 * 2 * 16 * 32 * 4
+
+
+class TestHloCollectives:
+    HLO = """
+%wbody.1 (arg.1: (s32[], f32[16,512])) -> (s32[], f32[16,512]) {
+  %ar.1 = f32[16,512]{1,0} all-reduce(%gte.2), replica_groups={{0,1,2,3}}, to_apply=%add.1
+}
+%wcond.1 (arg.2: (s32[], f32[16,512])) -> pred[] {
+  %c.9 = s32[] constant(7)
+  ROOT %cmp.1 = pred[] compare(%gte.9, %c.9), direction=LT
+}
+ENTRY %main.1 (p0: f32[16,512]) -> f32[16,512] {
+  %w.1 = (s32[], f32[16,512]) while(%t.0), condition=%wcond.1, body=%wbody.1
+  %ag.1 = f32[64,512]{1,0} all-gather(%gte.5), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+
+    def test_while_trip_multiplication(self):
+        got = hlo_cost.collective_wire_bytes(self.HLO)
+        ar_bytes = 16 * 512 * 4
+        # ring all-reduce: 2*b*(g-1)/g, 7 trips
+        assert got["all-reduce"] == pytest.approx(7 * 2 * ar_bytes * 3 / 4)
+        ag_bytes = 64 * 512 * 4
+        assert got["all-gather"] == pytest.approx(ag_bytes * 3 / 4)
+
+    def test_trip_count_parsing(self):
+        assert hlo_cost._trip_count(self.HLO.split("ENTRY")[0]
+                                    .split("%wcond.1")[1]) == 7
+        assert hlo_cost._trip_count("no compare here") == 1
+
+    def test_real_lowered_module(self):
+        """End to end on an actual compiled SPMD module."""
+        if jax.device_count() < 2:
+            pytest.skip("needs >1 device")
+
+    def test_group_size_iota_format(self):
+        line = "replica_groups=[8,32]<=[256] ..."
+        assert hlo_cost._group_size(line, 1) == 32
+
+
+class TestRoofline:
+    def test_tree_bytes_quantized(self):
+        from repro.core import quantize
+        t = {"w": quantize(jnp.ones((64, 128))), "b": jnp.ones((4,))}
+        got = tree_bytes(t)
+        assert got == 64 * 128 + 64 * 2 * 4 + 4 * 4    # codes + scales + b
+
+    def test_per_device_bytes_2d_sharding(self):
+        from jax.sharding import PartitionSpec as P
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        struct = {"w": jax.ShapeDtypeStruct((128, 256, 64), jnp.float32)}
+        specs = {"w": P("data", "model", None)}
+        got = per_device_bytes(struct, specs, FakeMesh())
+        assert got == 128 * 256 * 64 * 4 / 256
+
+    def test_analytic_decode_is_weights_plus_cache(self):
+        from repro.configs import get_config
+        from repro.configs.base import ShapeCell
+        cfg = get_config("glm4-9b")
+        cell = ShapeCell("decode_32k", 32768, 128, "decode")
+        out = analytic_bytes(cfg, cell, 256, int(10e9), int(100e9))
+        assert out["weights"] == pytest.approx(10e9 / 16)
+        assert out["cache"] == pytest.approx(100e9 / 256)
+        assert out["total"] > out["weights"] + out["cache"]

@@ -1,0 +1,165 @@
+"""Distribution-layer tests on a small in-process device mesh.
+
+conftest.py does NOT set device-count flags (smoke tests must see 1
+device), so this module spawns subprocess checks only where a multi-device
+mesh is essential, and otherwise validates spec construction logic (pure
+Python, no devices needed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeCell
+from repro.distribution import sharding as sh
+from repro.launch import steps as steplib
+from repro.models import build_model
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec-rule tests (axis sizes only)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def specs_for(arch, mode="train", mesh=MESH):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    ps = steplib.params_struct(model, quantized=(mode == "serve"))
+    return cfg, ps, sh.param_specs(cfg, ps, mesh, mode=mode)
+
+
+def test_dense_train_specs():
+    cfg, ps, specs = specs_for("glm4-9b")
+    assert specs["embed"] == P("model", None)
+    blk = specs["blocks"]
+    # H=32 divisible -> heads sharded; KV=2 not -> replicated
+    assert blk["attn"]["wq"] == P(None, "model", None, None)
+    assert blk["attn"]["wk"] == P(None, None, None, None)
+    assert blk["attn"]["wo"] == P(None, None, "model", None)
+    assert blk["mlp"]["w1"] == P(None, "model", None)
+    assert blk["mlp"]["w2"] == P(None, None, "model")
+    assert blk["norm1"]["gamma"] == P(None, None)
+
+
+def test_nondivisible_heads_fall_back_to_hd():
+    cfg, ps, specs = specs_for("llama3.2-3b")     # H=24 % 16 != 0
+    blk = specs["blocks"]
+    assert blk["attn"]["wq"] == P(None, None, "model", None)
+    assert blk["attn"]["wk"] == P(None, None, "model", None)
+
+
+def test_moe_expert_parallel():
+    # qwen3 default is FSDP-EP (promoted after the §Perf hillclimb):
+    # experts over data, d_ff over model
+    cfg, ps, specs = specs_for("qwen3-moe-30b-a3b")
+    blk = specs["blocks"]
+    assert blk["moe"]["w1"] == P(None, "data", "model", None)
+    assert blk["moe"]["w2"] == P(None, "data", None, "model")
+    assert blk["moe"]["router"] == P(None, None, None)
+    # classic TP-EP still available as an override
+    cfg2 = get_config("qwen3-moe-30b-a3b").with_(moe_shard="model")
+    model = build_model(cfg2)
+    ps2 = steplib.params_struct(model)
+    specs2 = sh.param_specs(cfg2, ps2, MESH, mode="train")
+    assert specs2["blocks"]["moe"]["w1"] == P(None, "model", None, None)
+
+
+def test_ssm_specs():
+    cfg, ps, specs = specs_for("mamba2-370m")
+    blk = specs["blocks"]
+    assert blk["ssm"]["wz"] == P(None, "model", None)
+    assert blk["ssm"]["wB"] == P(None, None, None)
+    assert blk["ssm"]["out_proj"] == P(None, None, "model")
+    assert blk["ssm"]["A_log"] == P(None, "model")
+    assert blk["ssm"]["norm"]["gamma"] == P(None, "model")
+
+
+def test_serve_specs_quantized():
+    cfg, ps, specs = specs_for("glm4-9b", mode="serve")
+    wq = specs["blocks"]["attn"]["wq"]
+    # serve: din row-parallel — D (last dim of codes) on model
+    assert wq.q == P(None, None, None, "model")
+    # scale last dim G=D/64=64 also divides 16
+    assert wq.scale == P(None, None, None, "model")
+    # embed stays vocab-sharded
+    assert specs["embed"].q == P("model", None)
+
+
+def test_sanitize_nulls_nondivisible():
+    spec = sh.sanitize(P("model", None), (100, 64), MESH)
+    assert spec == P(None, None)
+    spec = sh.sanitize(P(("pod", "data"), None), (64, 8), POD_MESH)
+    assert spec == P(("pod", "data"), None)
+    spec = sh.sanitize(P(("pod", "data"), None), (8, 8), POD_MESH)
+    assert spec == P(None, None)
+
+
+def test_cache_specs_kv_vs_seq():
+    # zamba2: KVH=32 divisible -> KVH sharded
+    cfg = get_config("zamba2-1.2b")
+    model = build_model(cfg)
+    cs = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = sh.cache_specs(cfg, cs, MESH)
+    assert specs["attn"]["k"] == P(None, "data", None, "model", None)
+    # glm4: KVH=2 -> sequence sharded (flash-decode SP)
+    cfg2 = get_config("glm4-9b")
+    m2 = build_model(cfg2)
+    cs2 = jax.eval_shape(lambda: m2.init_cache(128, 32768))
+    specs2 = sh.cache_specs(cfg2, cs2, MESH)
+    assert specs2["attn"]["k"] == P(None, "data", "model", None, None)
+
+
+def test_long500k_batch_replicated():
+    cfg = get_config("mamba2-370m")
+    model = build_model(cfg)
+    cell = ShapeCell("long_500k", 524288, 1, "decode")
+    batch = steplib.input_specs(cfg, cell)
+    specs = sh.data_specs(cfg, batch, MESH)
+    assert specs["tokens"] == P(None)
+
+
+def test_zero_optimizer_sharding():
+    cfg = get_config("llama3.2-3b")
+    model = build_model(cfg)
+    ps = steplib.params_struct(model)
+    pspecs = sh.param_specs(cfg, ps, MESH, mode="train")
+    sspecs = steplib.train_state_specs(cfg, pspecs, MESH, ps, zero=True)
+    # embed (V@model, D): ZeRO adds data to D
+    assert sspecs["opt"]["m"]["embed"] == P("model", "data")
+    # params themselves stay param-sharded only
+    assert sspecs["params"]["embed"] == P("model", None)
+
+
+def test_input_specs_cells():
+    cfg = get_config("qwen2-vl-7b")
+    for cell in (ShapeCell("train_4k", 4096, 256, "train"),
+                 ShapeCell("prefill_32k", 32768, 32, "prefill"),
+                 ShapeCell("decode_32k", 32768, 128, "decode")):
+        spec = steplib.input_specs(cfg, cell)
+        if cell.kind == "train":
+            assert spec["embeds"].shape == (256, 4096, cfg.d_model)
+            assert spec["labels"].shape == (256, 4096)
+        if cell.kind == "decode":
+            assert spec["tokens"].shape == (128,)
+
+
+def test_microbatch_picker():
+    cell = ShapeCell("train_4k", 4096, 256, "train")
+    assert steplib.pick_microbatches(cell, MESH) == 8      # 16 rows -> 2/dev
+    assert steplib.pick_microbatches(cell, POD_MESH) == 4  # 8 rows -> 2/dev
+
+
+def test_shapes_for_skips():
+    from repro.configs.base import shapes_for
+    names = [c.name for c in shapes_for(get_config("glm4-9b"))]
+    assert "long_500k" not in names        # pure full attention
+    names = [c.name for c in shapes_for(get_config("zamba2-1.2b"))]
+    assert "long_500k" in names            # hybrid SSM

@@ -1,0 +1,120 @@
+"""Tests for the beyond-paper extensions added in the extension pass:
+flash-prefill kernel, distributed sampling, GGML export."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels import ops, ref
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("b,s,h,kvh,d,causal", [
+        (2, 256, 4, 2, 64, True),
+        (1, 512, 8, 8, 128, True),
+        (2, 256, 4, 1, 64, False),
+        (1, 384, 6, 2, 64, True),      # non-pow2 S exercises block picker
+    ])
+    def test_vs_oracle(self, b, s, h, kvh, d, causal):
+        key = jax.random.PRNGKey(b * s + h)
+        q = jax.random.normal(key, (b, s, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+        out = ops.flash_prefill(q, k, v, causal=causal, interpret=True)
+        want = ref.ref_flash_prefill(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=2e-5)
+
+    def test_matches_model_blockwise_attention(self):
+        """The kernel and the model's scan-form attention agree."""
+        from repro.models.layers import AttnConfig, attention_scores_blockwise
+        b, s, h, kvh, d = 1, 256, 4, 2, 64
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (b, s, h, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+        blockwise = attention_scores_blockwise(
+            q * d ** -0.5, k, v, AttnConfig(h, kvh, d, q_chunk=64))
+        kern = ops.flash_prefill(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(blockwise),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestDistributedSampling:
+    def test_gumbel_matches_categorical_distribution(self):
+        from repro.serving.sampling_distributed import gumbel_argmax
+        logits = jnp.log(jnp.asarray([[0.6, 0.3, 0.1, 1e-9]]))
+        counts = np.zeros(4)
+        for i in range(600):
+            tok = gumbel_argmax(jax.random.PRNGKey(i), logits)
+            counts[int(tok[0])] += 1
+        freq = counts / counts.sum()
+        np.testing.assert_allclose(freq[:3], [0.6, 0.3, 0.1], atol=0.07)
+
+    def test_gumbel_shard_invariance(self):
+        """Same key -> same token regardless of how V would be sharded
+        (the noise is a function of the global index)."""
+        from repro.serving.sampling_distributed import gumbel_argmax
+        logits = jax.random.normal(jax.random.PRNGKey(0), (4, 512))
+        a = gumbel_argmax(jax.random.PRNGKey(7), logits)
+        b = gumbel_argmax(jax.random.PRNGKey(7), logits)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_topp_candidates_exact_when_k_covers(self):
+        from repro.serving.engine import sample_logits
+        from repro.serving.sampling_distributed import distributed_sample
+        logits = jax.random.normal(jax.random.PRNGKey(1), (8, 256)) * 3
+        # k = V: candidate strip == full vocab -> distribution matches the
+        # dense sampler; check top-p mask produces tokens from the nucleus
+        for i in range(32):
+            tok = distributed_sample(jax.random.PRNGKey(i), logits,
+                                     temperature=1.0, top_p=0.5, k=256)
+            dense_keep = []
+            for row in range(8):
+                srt = np.sort(np.asarray(logits[row]))[::-1]
+                probs = np.exp(srt - srt.max())
+                probs /= probs.sum()
+                kcount = int((np.cumsum(probs) < 0.5).sum()) + 1
+                thresh = srt[kcount - 1]
+                dense_keep.append(np.asarray(logits[row]) >= thresh)
+            for row in range(8):
+                assert dense_keep[row][int(tok[row])]
+
+    def test_wire_savings_estimate(self):
+        """The §Perf motivation: candidate strip << full logits."""
+        b, v, k, shards = 128, 151552, 64, 16
+        full = b * v * 4
+        strip = b * k * shards * (4 + 4)
+        assert full / strip > 70
+
+
+class TestGgmlExport:
+    def test_roundtrip_fidelity(self, tmp_path):
+        from repro.checkpoint import ggml_export
+        w = jax.random.normal(jax.random.PRNGKey(0), (16, 128)) * 2.0
+        t = quantize(w, group_size=64)
+        params = {"w": t, "norm": jnp.ones((128,))}
+        path = str(tmp_path / "model.rpq8")
+        manifest = ggml_export.export(path, params)
+        assert set(manifest) == {"['w']", "['norm']"}
+        back = ggml_export.read_back(path)
+        shape, arr = back["['w']"]
+        assert tuple(shape) == (16, 128)
+        # re-blocked 64->32: codes re-round against the (smaller) 32-block
+        # absmax — error bound is half a block step + f16 scale rounding
+        src = np.asarray(t.dequantize())
+        step = np.abs(src.reshape(16, 4, 32)).max(-1, keepdims=True) / 127.0
+        err = np.abs(arr - src).reshape(16, 4, 32)
+        assert np.all(err <= step * 0.51 + 1e-3)
+        _, norm = back["['norm']"]
+        np.testing.assert_array_equal(norm, np.ones(128, np.float32))
+
+    def test_block32_exactness_when_source_is_32(self, tmp_path):
+        from repro.checkpoint import ggml_export
+        w = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+        t = quantize(w, group_size=32)          # source == GGML block
+        codes, scales = ggml_export._reblock_q8(t)
+        # same blocks -> identical codes
+        np.testing.assert_array_equal(codes, np.asarray(t.q))

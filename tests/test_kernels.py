@@ -1,0 +1,148 @@
+"""Per-kernel interpret-mode validation vs the pure-jnp oracles.
+
+Each Pallas kernel is swept across shapes/dtypes and assert_allclose'd
+against ref.py (the system prompt's per-kernel requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels import ops, ref
+
+I = dict(interpret=True)
+
+
+@pytest.mark.parametrize("m,n,k", [
+    (1, 64, 128), (4, 256, 512), (8, 512, 256), (2, 96, 192),
+])
+def test_q8_matvec_shapes(m, n, k):
+    key = jax.random.PRNGKey(m * 1000 + n + k)
+    x = jax.random.normal(key, (m, k))
+    w = quantize(jax.random.normal(jax.random.fold_in(key, 1), (n, k)))
+    out = ops.q8_matmul(x, w, **I)
+    xq = quantize(x)
+    want = ref.ref_q8_matmul(xq.q, xq.scale, w.q, w.scale, w.group_size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (128, 256, 512, 64, 128, 256),
+    (256, 512, 1024, 128, 256, 512),
+    (64, 128, 128, 64, 128, 128),
+])
+def test_q8_gemm_blocks(m, n, k, bm, bn, bk):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k))
+    w = quantize(jax.random.normal(jax.random.fold_in(key, 1), (n, k)))
+    out = ops.q8_matmul(x, w, block_m=bm, block_n=bn, block_k=bk, **I)
+    xq = quantize(x)
+    want = ref.ref_q8_matmul(xq.q, xq.scale, w.q, w.scale, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("gs", [32, 64, 128])
+def test_q8_group_sizes(gs):
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, 256))
+    w = quantize(jax.random.normal(jax.random.PRNGKey(3), (128, 256)),
+                 group_size=gs)
+    out = ops.q8_matmul(x, w, **I)
+    xq = quantize(x, group_size=gs)
+    want = ref.ref_q8_matmul(xq.q, xq.scale, w.q, w.scale, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k", [(4, 256), (16, 512), (256, 1024), (3, 192)])
+def test_rmsnorm_quant(m, k):
+    x = jax.random.normal(jax.random.PRNGKey(m + k), (m, k)) * 3.0
+    g = jax.random.normal(jax.random.PRNGKey(1), (k,))
+    qk, sk = ops.rmsnorm_quant(x, g, **I)
+    qr, sr = ref.ref_rmsnorm_quant(x, g)
+    assert int(jnp.sum(qk != qr)) == 0
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,d", [(4, 8, 128), (2, 12, 64), (16, 2, 128)])
+def test_rope_kernel(b, h, d, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(b * h), (b, h, d)).astype(dtype)
+    ang = jax.random.uniform(jax.random.PRNGKey(5), (b, d // 2)) * 6.28
+    cos = jnp.concatenate([jnp.cos(ang)] * 2, -1)
+    sin = jnp.concatenate([jnp.sin(ang)] * 2, -1)
+    out = ops.rope(x, cos, sin, **I)
+    want = ref.ref_rope(x, cos[:, None, :], sin[:, None, :])
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5, atol=1e-2)
+
+
+@pytest.mark.parametrize("n,k", [(128, 256), (512, 512), (96, 128)])
+def test_q4_matvec(n, k):
+    x = jax.random.normal(jax.random.PRNGKey(n), (4, k))
+    w = quantize(jax.random.normal(jax.random.PRNGKey(k), (n, k)), bits=4)
+    out = ops.q8_matmul(x, w, **I)
+    xq = quantize(x)
+    want = ref.ref_q4_matvec(xq.q, xq.scale, w.q, w.scale, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,kvh,hq,d", [
+    (2, 1024, 4, 4, 128), (1, 512, 2, 8, 64), (4, 2048, 1, 4, 128),
+])
+def test_decode_attention_fp(b, s, kvh, hq, d):
+    key = jax.random.PRNGKey(b * s)
+    q = jax.random.normal(key, (b, kvh * hq, d)) / np.sqrt(d)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    lens = jnp.asarray(np.random.default_rng(0).integers(1, s, b), jnp.int32)
+    out = ops.decode_attention(q, k, v, lens, **I)
+    want = ref.ref_decode_attention(
+        q.reshape(b, kvh, hq, d), k, v, lens.reshape(b, 1)
+    ).reshape(b, kvh * hq, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_int8_kv():
+    """Beyond-paper int8 KV cache: kernel matches dequantized reference."""
+    b, s, kvh, hq, d = 2, 512, 2, 4, 64
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (b, kvh * hq, d)) / np.sqrt(d)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    absk = jnp.max(jnp.abs(kf), -1, keepdims=True)
+    absv = jnp.max(jnp.abs(vf), -1, keepdims=True)
+    kq = jnp.round(kf / absk * 127).astype(jnp.int8)
+    vq = jnp.round(vf / absv * 127).astype(jnp.int8)
+    ks = (absk[..., 0] / 127.0)
+    vs = (absv[..., 0] / 127.0)
+    lens = jnp.array([300, 512], jnp.int32)
+    out = ops.decode_attention(q, kq, vq, lens, ks, vs, **I)
+    want = ref.ref_decode_attention(q.reshape(b, kvh, hq, d), kq, vq,
+                                    lens.reshape(b, 1), ks, vs
+                                    ).reshape(b, kvh * hq, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_decode_attention_matches_fp_within_quant_error():
+    b, s, kvh, hq, d = 1, 256, 2, 2, 64
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (b, kvh * hq, d)) / np.sqrt(d)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    lens = jnp.array([s], jnp.int32)
+    fp = ops.decode_attention(q, kf, vf, lens, **I)
+    absk = jnp.max(jnp.abs(kf), -1, keepdims=True)
+    absv = jnp.max(jnp.abs(vf), -1, keepdims=True)
+    kq = jnp.round(kf / absk * 127).astype(jnp.int8)
+    vq = jnp.round(vf / absv * 127).astype(jnp.int8)
+    i8 = ops.decode_attention(q, kq, vq, lens,
+                              absk[..., 0] / 127, absv[..., 0] / 127, **I)
+    np.testing.assert_allclose(np.asarray(i8), np.asarray(fp),
+                               rtol=0.1, atol=0.05)

@@ -1,0 +1,148 @@
+"""Core quantization: unit + hypothesis property tests (paper §3.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEFAULT_GROUP_SIZE, PAPER_POLICY, QuantPolicy,
+                        QuantizedTensor, choose_group_size, count_bytes,
+                        dequantize, qmatmul_ref, quantize, quantize_params,
+                        quantize_q4_0, quantize_q8_0)
+from repro.core.qlinear import _qdot_dequant, _qdot_integer, qdot
+
+
+class TestQ8Basics:
+    def test_roundtrip_error_bound(self):
+        """|x - dq(q(x))| <= scale/2 = absmax/254 per group (half step)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 256))
+        t = quantize_q8_0(x)
+        err = jnp.abs(t.dequantize() - x)
+        xg = x.reshape(16, -1, 64)
+        bound = jnp.max(jnp.abs(xg), -1, keepdims=True) / 127.0 / 2.0 + 1e-7
+        assert bool(jnp.all(err.reshape(16, -1, 64) <= bound))
+
+    def test_paper_formula(self):
+        """q = round(127 * w / ||w||_inf) exactly (paper eq. in §3.2)."""
+        w = np.array([[0.5, -1.0, 0.25, 0.125] * 16], np.float32)
+        t = quantize_q8_0(jnp.asarray(w))
+        expect = np.round(127.0 * w / np.max(np.abs(w)))
+        np.testing.assert_array_equal(np.asarray(t.q)[0], expect[0])
+
+    def test_zero_group(self):
+        t = quantize_q8_0(jnp.zeros((2, 128)))
+        assert bool(jnp.all(t.q == 0)) and bool(jnp.all(t.scale == 0))
+        assert bool(jnp.all(t.dequantize() == 0))
+
+    def test_q4_pack_roundtrip(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+        t = quantize_q4_0(x)
+        assert t.q.shape == (8, 64)          # packed 2:1
+        err = jnp.max(jnp.abs(t.dequantize() - x))
+        assert float(err) < 0.5              # 4-bit: coarse but bounded
+
+    def test_choose_group_size(self):
+        assert choose_group_size(256) == 64
+        assert choose_group_size(96) == 48
+        assert choose_group_size(50280) == 60
+        assert choose_group_size(7) == 7
+
+    def test_pytree_flatten(self):
+        t = quantize_q8_0(jnp.ones((4, 64)))
+        leaves, treedef = jax.tree_util.tree_flatten(t)
+        assert len(leaves) == 2
+        t2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert t2.group_size == t.group_size and t2.bits == 8
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    k_groups=st.integers(1, 6),
+    gs=st.sampled_from([32, 64, 128]),
+    scale_pow=st.integers(-8, 8),
+)
+def test_property_roundtrip_bounded(rows, k_groups, gs, scale_pow):
+    """Quantization error is bounded by half a step at ANY magnitude."""
+    k = k_groups * gs
+    x = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(rows * 131 + k), (rows, k))) * (2.0 ** scale_pow)
+    t = quantize(jnp.asarray(x), group_size=gs)
+    deq = np.asarray(t.dequantize())
+    xg = x.reshape(rows, k_groups, gs)
+    step = np.max(np.abs(xg), -1, keepdims=True) / 127.0
+    err = np.abs((deq - x).reshape(rows, k_groups, gs))
+    assert np.all(err <= step / 2 + 1e-6 * (1 + step))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 4), n=st.integers(1, 3), kg=st.integers(1, 4),
+    bits=st.sampled_from([8, 4]),
+)
+def test_property_qmatmul_close_to_fp(m, n, kg, bits):
+    """Integer matmul approximates the fp32 matmul within quant error:
+    |err| <= sum_g (|x|_g-max · step_w + |w|-max · step_x + step·step)·gs."""
+    k = kg * 64
+    kx = jax.random.PRNGKey(m * 7 + n * 13 + k)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(jax.random.fold_in(kx, 1), (n * 32, k))
+    xq = quantize(x, bits=8)
+    wq = quantize(w, bits=bits)
+    out = qmatmul_ref(xq, wq)
+    exact = xq.dequantize() @ wq.dequantize().T
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=2e-4, atol=2e-4)
+
+
+class TestQdotStrategies:
+    def test_integer_vs_dequant_agree(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+        w = quantize(jax.random.normal(jax.random.PRNGKey(1), (96, 256)))
+        a = _qdot_integer(x, w)
+        # feed the dequant path the SAME quantized activations the integer
+        # path sees — then the two must agree to f32 rounding
+        xdq = dequantize(quantize(x))
+        b = _qdot_dequant(xdq, w)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_float_weight_passthrough(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 64))
+        np.testing.assert_allclose(np.asarray(qdot(x, w)),
+                                   np.asarray(x @ w.T), rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestPolicy:
+    def test_norms_stay_float(self):
+        """Paper: RMSNorm params are fp32; embeddings/attn/ffn quantize."""
+        params = {
+            "embed": jnp.ones((512, 64)),
+            "blocks": {
+                "attn": {"wq": jnp.ones((16, 32, 64))},
+                "mlp": {"w1": jnp.ones((256, 64))},
+                "norm1": {"gamma": jnp.ones((4096,))},
+            },
+            "final_norm": {"gamma": jnp.ones((4096,))},
+        }
+        qp = quantize_params(params, QuantPolicy(min_size=128))
+        assert isinstance(qp["embed"], QuantizedTensor)
+        assert isinstance(qp["blocks"]["attn"]["wq"], QuantizedTensor)
+        assert isinstance(qp["blocks"]["mlp"]["w1"], QuantizedTensor)
+        assert not isinstance(qp["blocks"]["norm1"]["gamma"], QuantizedTensor)
+        assert not isinstance(qp["final_norm"]["gamma"], QuantizedTensor)
+
+    def test_bytes_shrink_4x(self):
+        params = {"mlp": {"w1": jnp.ones((1024, 1024), jnp.float32)}}
+        before = count_bytes(params)["total"]
+        after = count_bytes(quantize_params(params, PAPER_POLICY))["total"]
+        assert after < before / 3.5          # int8 + scales ≈ 3.76x smaller
+
+    def test_q4_packs_8x(self):
+        params = {"mlp": {"w1": jnp.ones((1024, 1024), jnp.float32)}}
+        after = count_bytes(quantize_params(
+            params, QuantPolicy(bits=4)))["total"]
+        assert after < 1024 * 1024 * 4 / 6.5
