@@ -1,14 +1,25 @@
-"""Kernel-path microbenchmarks (Appendix A.2 analog).
+"""Kernel-path microbenchmarks (Appendix A.2 analog) + decode-path perf.
 
 The paper's Table 7 lists cycle counts per synthesized module
 (rmsnorm / quantize / matmul_768_768 / ... / matmul_768_32000).  The CPU
 analog times the same pipeline stages through our jnp execution paths
 (the Pallas kernels target TPU and only run in interpret mode here, which
 is not a timing surface), at the paper's exact shapes.
+
+``run_decode`` tracks the PR-1 decode optimizations and writes machine-
+readable JSON (``BENCH_decode.json``) so CI can chart the trajectory:
+
+  * decode-attention at max_seq=2048 for live lens {64, 512, 2048}: the
+    full-scan jnp path costs the same regardless of length; the
+    length-pruned kernel's executed-tile count scales with the live
+    length (the interpret-mode proxy for HBM traffic — wall-clock there
+    is not meaningful, tiles fetched is),
+  * one quantized decode layer step, fused (4 GEMVs) vs unfused (7).
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -60,3 +71,65 @@ def run(quiet: bool = False):
         for r in rows:
             print(f"{r[0]},{r[1]:.1f},{r[2]}")
     return rows
+
+
+def run_decode(quiet: bool = False, json_path: str = "BENCH_decode.json",
+               max_seq: int = 2048, lens=(64, 512, 2048)) -> dict:
+    """Decode hot-path benchmarks; returns (and writes) a JSON dict."""
+    from repro.configs import get_config, reduced
+    from repro.kernels import ops
+    from repro.models import build_model
+    from repro.models.layers import AttnConfig, attention_decode
+
+    result: dict = {"max_seq": max_seq, "attention": [], "layer_step": {}}
+    key = jax.random.PRNGKey(0)
+    b, kvh, hq, d = 4, 2, 4, 64
+    block_s = 256
+    q = jax.random.normal(key, (b, kvh * hq, d)) / np.sqrt(d)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, max_seq, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, max_seq, kvh, d))
+    acfg = AttnConfig(kvh * hq, kvh, d)
+    f = jax.jit(lambda q, k, v, l: attention_decode(q, k, v, l, acfg))
+    for ln in lens:
+        lens_j = jnp.full((b,), ln, jnp.int32)
+        t_full = _time(f, q, k, v, lens_j, iters=10)
+        _, counts = ops.decode_attention(q, k, v, lens_j, block_s=block_s,
+                                         return_tile_counts=True,
+                                         interpret=True)
+        tiles_live = int(np.asarray(counts)[0, 0])
+        result["attention"].append({
+            "len": int(ln),
+            "full_scan_us": t_full,
+            "tiles_total": max_seq // block_s,
+            "tiles_fetched_pruned": tiles_live,
+            "hbm_traffic_fraction": tiles_live / (max_seq // block_s),
+        })
+
+    # fused vs unfused quantized decode layer step (jnp/XLA timing surface)
+    cfg = reduced(get_config("llama2-110m"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((4,), jnp.int32)
+    for name, fused in (("unfused_7_gemv", False), ("fused_4_gemv", True)):
+        qp = model.quantize(params, fuse_decode=fused)
+        cache = model.init_cache(4, 256)
+        step = jax.jit(model.decode_step)
+        t = _time(lambda p, c, t_: step(p, c, t_)[0], qp, cache, toks,
+                  iters=10)
+        result["layer_step"][name] = t
+    result["layer_step"]["speedup"] = (
+        result["layer_step"]["unfused_7_gemv"]
+        / result["layer_step"]["fused_4_gemv"])
+
+    with open(json_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    if not quiet:
+        for row in result["attention"]:
+            print(f"kernelbench/decode_attn_len{row['len']},"
+                  f"{row['full_scan_us']:.1f},us/call"
+                  f" (pruned tiles {row['tiles_fetched_pruned']}"
+                  f"/{row['tiles_total']})")
+        for name in ("unfused_7_gemv", "fused_4_gemv"):
+            print(f"kernelbench/decode_step_{name},"
+                  f"{result['layer_step'][name]:.1f},us/call")
+    return result

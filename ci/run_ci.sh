@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: full test suite + decode-path benchmarks (interpret mode).
+# Everything runs on CPU — Pallas kernels execute under interpret=True and
+# the decode bench writes BENCH_decode.json for trajectory tracking.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q -x
+
+python - <<'EOF'
+import sys
+sys.path.insert(0, ".")
+from benchmarks import kernels_bench
+kernels_bench.run()
+kernels_bench.run_decode()
+EOF

@@ -156,6 +156,18 @@ def quantize_q8_0(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> Quantiz
     return quantize(x, group_size=group_size, bits=8)
 
 
+def quantize_rows(vec: jax.Array):
+    """Q8_0 with one group per full vector: (..., hd) -> int8 codes
+    (..., hd) + f32 scale (...,).  The KV-cache quantizer — both the
+    contiguous cache (models/transformer) and the paged pool
+    (serving/paged_cache) write through this, so their numerics can
+    never drift apart."""
+    absmax = jnp.max(jnp.abs(vec.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
+    q = jnp.clip(jnp.round(vec * inv), -127, 127).astype(jnp.int8)
+    return q, (absmax[..., 0] / 127.0)
+
+
 def quantize_q4_0(x: jax.Array, group_size: int = DEFAULT_GROUP_SIZE) -> QuantizedTensor:
     return quantize(x, group_size=group_size, bits=4)
 
@@ -172,6 +184,55 @@ def _dequantize_q8(q, scale, group_size: int, dtype):
 def dequantize(t: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
     q = _unpack_nibbles(t.q) if t.bits == 4 else t.q
     return _dequantize_q8(q, t.scale, t.group_size, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Structural ops — reshape/concat quantized tensors WITHOUT requantizing.
+#
+# Decode-path weight fusion (models/transformer.fuse_decode_weights) builds
+# one big GEMV operand out of several already-quantized projections.  Codes
+# and scales never change, only their shape bookkeeping: groups tile the
+# last (contraction) axis contiguously, so any reshape that leaves the last
+# axis alone — or folds whole leading axes into it — preserves the exact
+# (code, scale) pairing and therefore the exact dequantized values.
+# ---------------------------------------------------------------------------
+
+
+def qt_reshape_lead(t: QuantizedTensor, *new_lead: int) -> QuantizedTensor:
+    """Reshape the leading (non-grouped) axes; the grouped last axis and the
+    group structure are untouched, so dequantize() is bit-identical."""
+    q = t.q.reshape(*new_lead, t.q.shape[-1])
+    scale = t.scale.reshape(*new_lead, t.scale.shape[-1])
+    return QuantizedTensor(q=q, scale=scale, group_size=t.group_size,
+                           bits=t.bits, orig_dim=t.orig_dim)
+
+
+def qt_fold_lead_into_groups(t: QuantizedTensor) -> QuantizedTensor:
+    """Fold the innermost leading axis into the grouped axis:
+    (*lead, A, K) -> (*lead, A*K).  Legal because groups tile K contiguously
+    — after the fold, groups tile A*K contiguously with the same scales."""
+    *lead, a, kq = t.q.shape
+    q = t.q.reshape(*lead, a * kq)
+    *_, _, g = t.scale.shape
+    scale = t.scale.reshape(*lead, a * g)
+    return QuantizedTensor(q=q, scale=scale, group_size=t.group_size,
+                           bits=t.bits, orig_dim=a * t.orig_dim)
+
+
+def qt_concat(ts, axis: int) -> QuantizedTensor:
+    """Concatenate quantized tensors along a leading (non-grouped) axis."""
+    t0 = ts[0]
+    if any(t.group_size != t0.group_size or t.bits != t0.bits
+           or t.orig_dim != t0.orig_dim for t in ts[1:]):
+        raise ValueError("qt_concat needs matching group/bits/orig_dim")
+    nd = t0.q.ndim
+    ax = axis % nd
+    if ax == nd - 1:
+        raise ValueError("cannot concat along the grouped axis")
+    q = jnp.concatenate([t.q for t in ts], axis=ax)
+    scale = jnp.concatenate([t.scale for t in ts], axis=ax)
+    return QuantizedTensor(q=q, scale=scale, group_size=t0.group_size,
+                           bits=t0.bits, orig_dim=t0.orig_dim)
 
 
 # ---------------------------------------------------------------------------

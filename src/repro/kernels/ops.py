@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.quantization import QuantizedTensor, quantize
 from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
 from repro.kernels.q4_matmul import q4_matvec_pallas
 from repro.kernels.q8_matmul import q8_matmul_pallas
@@ -103,26 +104,30 @@ def rmsnorm_quant(x: jax.Array, gamma: jax.Array, *, eps: float = 1e-5,
 @partial(jax.jit, static_argnames=("interpret",))
 def rope(x: jax.Array, cos: jax.Array, sin: jax.Array, *,
          interpret: bool = False) -> jax.Array:
-    """x: (B, H, D); cos/sin: (B, D) (full-width, already duplicated halves)."""
-    b, h, d = x.shape
-    x2 = x.reshape(b * h, d)
-    cos2 = jnp.repeat(cos, h, axis=0)
-    sin2 = jnp.repeat(sin, h, axis=0)
-    bm = _largest_block(b * h, 256)
-    out = rope_pallas(x2, cos2, sin2, block_m=bm, interpret=interpret)
-    return out.reshape(b, h, d)
+    """x: (B, H, D); cos/sin: (B, D) (full-width, already duplicated halves).
+
+    The angle tables stay (B, D) in HBM — the kernel broadcasts them
+    across H via its index_map instead of ``jnp.repeat``-ing them to
+    (B*H, D) first."""
+    return rope_pallas(x, cos, sin, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret", "block_s"))
+@partial(jax.jit, static_argnames=("block_s", "prune", "return_tile_counts",
+                                   "interpret"))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      lens: jax.Array, k_scale: Optional[jax.Array] = None,
                      v_scale: Optional[jax.Array] = None, *,
-                     block_s: int = 512, interpret: bool = False
-                     ) -> jax.Array:
+                     block_s: int = 512, prune: bool = True,
+                     return_tile_counts: bool = False,
+                     interpret: bool = False):
     """Single-token attention vs. a (possibly int8) KV cache.
 
     q: (B, H, D) already scaled by 1/sqrt(D); k/v: (B, S, KVH, D);
     lens: (B,) int32 valid lengths.  Returns (B, H, D) f32.
+
+    ``prune=True`` (default) skips fetching/computing KV tiles past each
+    row's length — bit-exact with the full scan.  ``return_tile_counts``
+    additionally returns (B, KVH) int32 counts of tiles whose body ran.
     """
     b, h, d = q.shape
     kvh = k.shape[2]
@@ -130,9 +135,37 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     qg = q.reshape(b, kvh, hq, d)
     s = k.shape[1]
     bs = _largest_block(s, block_s)
-    out = decode_attention_pallas(qg, k, v, lens.reshape(b, 1),
-                                  k_scale, v_scale, block_s=bs,
+    out = decode_attention_pallas(qg, k, v, lens.reshape(b),
+                                  k_scale, v_scale, block_s=bs, prune=prune,
+                                  return_tile_counts=return_tile_counts,
                                   interpret=interpret)
+    if return_tile_counts:
+        return out[0].reshape(b, h, d), out[1]
+    return out.reshape(b, h, d)
+
+
+@partial(jax.jit, static_argnames=("return_tile_counts", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           page_table: jax.Array, lens: jax.Array,
+                           ks_pool: Optional[jax.Array] = None,
+                           vs_pool: Optional[jax.Array] = None, *,
+                           return_tile_counts: bool = False,
+                           interpret: bool = False):
+    """Single-token attention reading K/V through a vLLM-style page table.
+
+    q: (B, H, D) already scaled by 1/sqrt(D); k/v_pool: (NB, BS, KVH, D)
+    (int8 when ks/vs_pool (NB, BS, KVH) are given); page_table: (B, MB)
+    int32; lens: (B,) int32.  Returns (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    kvh = k_pool.shape[2]
+    hq = h // kvh
+    qg = q.reshape(b, kvh, hq, d)
+    out = paged_decode_attention_pallas(
+        qg, k_pool, v_pool, page_table, lens, ks_pool, vs_pool,
+        return_tile_counts=return_tile_counts, interpret=interpret)
+    if return_tile_counts:
+        return out[0].reshape(b, h, d), out[1]
     return out.reshape(b, h, d)
 
 

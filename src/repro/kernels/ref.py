@@ -75,6 +75,30 @@ def ref_decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return jnp.einsum("bhqs,bshd->bhqd", p, vf)
 
 
+def ref_paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, page_table: jax.Array,
+                               lens: jax.Array, ks_pool=None, vs_pool=None
+                               ) -> jax.Array:
+    """Gather-then-dense oracle for the paged decode kernel.
+
+    q: (B, KVH, HQ, D) pre-scaled; k/v_pool: (NB, BS, KVH, D);
+    page_table: (B, MB) int32 (-1 = unassigned); lens: (B,) int32.
+    Materializes each row's contiguous (MB*BS) view through the page table
+    and runs the dense reference; unassigned blocks read pool block 0 and
+    are masked by ``lens``.
+    """
+    nb, bs, kvh, d = k_pool.shape
+    b, mb = page_table.shape
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe].reshape(b, mb * bs, kvh, d)
+    v = v_pool[safe].reshape(b, mb * bs, kvh, d)
+    ks = vs = None
+    if ks_pool is not None:
+        ks = ks_pool[safe].reshape(b, mb * bs, kvh)
+        vs = vs_pool[safe].reshape(b, mb * bs, kvh)
+    return ref_decode_attention(q, k, v, lens.reshape(b, 1), ks, vs)
+
+
 def ref_flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
                       causal: bool = True) -> jax.Array:
     """q (B,S,H,D); k/v (B,S,KVH,D): exact softmax attention oracle."""

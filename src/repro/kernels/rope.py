@@ -8,45 +8,50 @@ ops.  Llama/neox convention: rotate halves.
 
     out = x * cos  +  rotate_half(x) * sin,   rotate_half(x) = [-x2, x1]
 
-The wrapper pre-broadcasts cos/sin to the flattened (rows, D) layout so the
-kernel is a clean 2-D elementwise grid (lane dim = head_dim).
+cos/sin are per-batch-row angle tables shared by every head: the grid
+walks the batch dim and each step fetches one (1, D) angle row alongside
+its (1, H, D) head block — the head broadcast happens on VMEM-resident
+data inside the kernel.  (An earlier version ``jnp.repeat``-ed the tables
+to (B*H, D) in HBM first: an H-fold duplication of pure angle bytes on the
+decode hot path.)
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tpu_compat import compiler_params
 
 
 def _kernel(x_ref, cos_ref, sin_ref, o_ref):
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)                  # (1, H, D)
     d = x.shape[-1]
     x1 = x[..., : d // 2]
     x2 = x[..., d // 2:]
     rot = jnp.concatenate([-x2, x1], axis=-1)
-    o_ref[...] = (x * cos_ref[...] + rot * sin_ref[...]).astype(o_ref.dtype)
+    cos = cos_ref[...][:, None, :]                      # (1, 1, D): bcast H
+    sin = sin_ref[...][:, None, :]
+    o_ref[...] = (x * cos + rot * sin).astype(o_ref.dtype)
 
 
 def rope_pallas(x: jax.Array, cos: jax.Array, sin: jax.Array, *,
-                block_m: int = 256, interpret: bool = False) -> jax.Array:
-    """x: (M, D) rows=(batch*heads[*seq]); cos/sin: (M, D) pre-broadcast."""
-    m, d = x.shape
-    block_m = min(block_m, m)
-    if m % block_m:
-        raise ValueError(f"M={m} not a multiple of block_m={block_m}")
-    grid = (m // block_m,)
-    spec = pl.BlockSpec((block_m, d), lambda i: (i, 0))
+                interpret: bool = False) -> jax.Array:
+    """x: (B, H, D); cos/sin: (B, D) full-width (duplicated halves), one
+    row per batch element — broadcast across H inside the kernel."""
+    b, h, d = x.shape
+    if cos.shape != (b, d):
+        raise ValueError(f"cos/sin must be (B, D)=({b}, {d}), got {cos.shape}")
+    xspec = pl.BlockSpec((1, h, d), lambda i: (i, 0, 0))
+    aspec = pl.BlockSpec((1, d), lambda i: (i, 0))
     return pl.pallas_call(
         _kernel,
-        grid=grid,
-        in_specs=[spec, spec, spec],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        grid=(b,),
+        in_specs=[xspec, aspec, aspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), x.dtype),
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, cos, sin)

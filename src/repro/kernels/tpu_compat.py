@@ -1,0 +1,17 @@
+"""Version compatibility helpers for the Pallas TPU API.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``); every kernel
+routes through :func:`compiler_params` so the package imports on either.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kw):
+    return _CompilerParams(**kw)

@@ -188,14 +188,47 @@ def attention_decode(q, k_cache, v_cache, length, cfg: AttnConfig,
     return out.reshape(b, h, d).astype(q.dtype)
 
 
+def paged_attention_decode(q, k_pool, v_pool, page_table, length,
+                           cfg: AttnConfig, ks_pool=None, vs_pool=None
+                           ) -> jax.Array:
+    """Single-position attention against a paged block pool (jnp path).
+
+    q: (B, H, D) pre-scaled; k/v_pool: (NB, BS, KVH, D); page_table (B, MB)
+    int32 (-1 = unassigned; such blocks read pool block 0 and are masked by
+    ``length``); length (B,).  Gathers each row's blocks into a contiguous
+    view and defers to :func:`attention_decode` — the numerics the Pallas
+    kernel (kernels/paged_decode_attention.py) matches, which on TPU fuses
+    this gather into its BlockSpec index_map instead of materializing it.
+    """
+    nb, bs, kvh, d = k_pool.shape
+    b, mb = page_table.shape
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe].reshape(b, mb * bs, kvh, d)
+    v = v_pool[safe].reshape(b, mb * bs, kvh, d)
+    ks = vs = None
+    if ks_pool is not None:
+        ks = ks_pool[safe].reshape(b, mb * bs, kvh)
+        vs = vs_pool[safe].reshape(b, mb * bs, kvh)
+    return attention_decode(q, k, v, length, cfg, ks, vs)
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 
 
 def swiglu_mlp(p, x) -> jax.Array:
-    """w1/w3: (F, D); w2: (D, F) — SwiGLU as in Llama (paper-faithful)."""
-    h = jax.nn.silu(qdot(x, p["w1"])) * qdot(x, p["w3"])
+    """w1/w3: (F, D); w2: (D, F) — SwiGLU as in Llama (paper-faithful).
+
+    When ``w13`` (the fused [w1; w3] from fuse_decode_weights) is present,
+    gate and up projections run as ONE GEMV — identical math, since each
+    output row's dot product is independent of the others."""
+    if "w13" in p:
+        h13 = qdot(x, p["w13"])
+        f = h13.shape[-1] // 2
+        h = jax.nn.silu(h13[..., :f]) * h13[..., f:]
+    else:
+        h = jax.nn.silu(qdot(x, p["w1"])) * qdot(x, p["w3"])
     return qdot(h.astype(x.dtype), p["w2"]).astype(x.dtype)
 
 

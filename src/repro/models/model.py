@@ -26,10 +26,21 @@ class Model:
     prefill: Callable[..., Tuple[jax.Array, Any]]
     decode_step: Callable[..., Tuple[jax.Array, Any]]
     init_cache: Callable[[int, int], Any]
+    # paged serving (vLLM-style block pool); None for families whose cache
+    # is not a single attn bank (ssm/hybrid/audio/interleaved-moe).
+    init_paged_cache: Optional[Callable[..., Any]] = None
 
-    def quantize(self, params, policy: Optional[QuantPolicy] = None):
-        """Post-training quantization (the paper's §3.2 flow)."""
-        return quantize_params(params, policy or QuantPolicy())
+    def quantize(self, params, policy: Optional[QuantPolicy] = None,
+                 fuse_decode: bool = True):
+        """Post-training quantization (the paper's §3.2 flow).
+
+        ``fuse_decode`` additionally builds the fused decode GEMV operands
+        (wqkv / w13 / wo_f — see transformer.fuse_decode_weights) so the
+        serving decode step runs 4 weight GEMVs per layer instead of 7."""
+        qp = quantize_params(params, policy or QuantPolicy())
+        if fuse_decode and self.cfg.family != "audio":
+            qp = transformer.fuse_decode_weights(qp, self.cfg)
+        return qp
 
 
 def build_model(cfg: ModelConfig) -> Model:
@@ -43,6 +54,9 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, c, t, **kw),
             init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
         )
+    paged = None
+    if transformer.supports_paged_cache(cfg):
+        paged = lambda bsz, **kw: transformer.init_paged_cache(cfg, bsz, **kw)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -51,6 +65,7 @@ def build_model(cfg: ModelConfig) -> Model:
         decode_step=lambda p, c, t, **kw: transformer.decode_step(
             p, cfg, c, t, **kw),
         init_cache=lambda bsz, seq: transformer.init_cache(cfg, bsz, seq),
+        init_paged_cache=paged,
     )
 
 

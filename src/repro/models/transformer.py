@@ -23,6 +23,10 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.core.qlinear import qdot, qeinsum
+from repro.core.quantization import (QuantizedTensor, qt_concat,
+                                     quantize_rows,
+                                     qt_fold_lead_into_groups,
+                                     qt_reshape_lead)
 from repro.models import layers as L
 from repro.models import ssm as S
 
@@ -161,6 +165,87 @@ def init_params(cfg: ModelConfig, key) -> Params:
     else:
         raise ValueError(f"family {fam} not built here (audio -> encdec.py)")
     return params
+
+
+# ---------------------------------------------------------------------------
+# decode-weight fusion (7 GEMVs/layer -> 4)
+# ---------------------------------------------------------------------------
+
+
+def _merge_head_axes(w):
+    """(*lead, H, hd, D) -> (*lead, H*hd, D); works on float or quantized."""
+    if isinstance(w, QuantizedTensor):
+        *lead, h, hd, _ = w.q.shape
+        return qt_reshape_lead(w, *lead, h * hd)
+    *lead, h, hd, d = w.shape
+    return w.reshape(*lead, h * hd, d)
+
+
+def _fold_head_axes(w):
+    """(*lead, D, H, hd) -> (*lead, D, H*hd); works on float or quantized."""
+    if isinstance(w, QuantizedTensor):
+        return qt_fold_lead_into_groups(w)
+    *lead, d, h, hd = w.shape
+    return w.reshape(*lead, d, h * hd)
+
+
+def _concat_rows(ws):
+    if isinstance(ws[0], QuantizedTensor):
+        return qt_concat(ws, axis=-2)
+    return jnp.concatenate(ws, axis=-2)
+
+
+def fuse_decode_weights(params: Params, cfg: ModelConfig) -> Params:
+    """Add fused decode-GEMV operands next to the per-projection weights.
+
+    Single-token decode is HBM-bandwidth- and launch-bound: each layer runs
+    7 independent quantized GEMVs (q/k/v/o + gate/up/down), each streaming
+    its weight through its own kernel call and — on the integer/pallas
+    strategies — re-quantizing the same activation vector.  Fusing
+
+        wqkv = [wq; wk; wv]  ->  ((H + 2*KVH) * hd, D)
+        w13  = [w1; w3]      ->  (2 * d_ff, D)
+        wo_f = wo flattened  ->  (D, H * hd)
+
+    drops that to 4 launches and quantizes the post-norm activation once
+    per fused projection.  Codes/scales are concatenated structurally
+    (core.quantization qt_*), never requantized, so fused and unfused
+    forward passes agree to f32 summation order.
+
+    The walk is structural: any subtree carrying {wq, wk, wv, wo} (stacked
+    per layer or not) gains ``wqkv``/``wo_f``; any plain SwiGLU mlp subtree
+    gains ``w13``.  MoE expert banks (which also hold w1/w3/w2 but route
+    through einsum dispatch) are left alone.  The per-projection weights
+    are kept — prefill still consumes the head-structured layout; a
+    production build would derive one from the other at load time.
+    """
+
+    def fusable(ws):
+        """All-quantized or all-float; a min_size policy can mix kinds
+        (e.g. float wk beside quantized wq) — skip fusion there."""
+        kinds = {isinstance(w, QuantizedTensor) for w in ws}
+        if len(kinds) > 1:
+            return False
+        if kinds == {True} and len({(w.group_size, w.bits) for w in ws}) > 1:
+            return False
+        return True
+
+    def walk(d):
+        if not isinstance(d, dict):
+            return d
+        out = {k: walk(v) for k, v in d.items()}
+        if ({"wq", "wk", "wv", "wo"} <= set(out)
+                and fusable([out["wq"], out["wk"], out["wv"]])):
+            out["wqkv"] = _concat_rows([_merge_head_axes(out["wq"]),
+                                        _merge_head_axes(out["wk"]),
+                                        _merge_head_axes(out["wv"])])
+            out["wo_f"] = _fold_head_axes(out["wo"])
+        if ({"w1", "w3", "w2"} <= set(out) and "router" not in out
+                and fusable([out["w1"], out["w3"]])):
+            out["w13"] = _concat_rows([out["w1"], out["w3"]])
+        return out
+
+    return walk(params)
 
 
 # ---------------------------------------------------------------------------
@@ -381,10 +466,7 @@ def _kv_int8(cfg: ModelConfig) -> bool:
 
 def _quantize_kv(vec: jax.Array):
     """vec (..., hd) -> int8 codes + one f32 scale per vector (group=hd)."""
-    absmax = jnp.max(jnp.abs(vec.astype(jnp.float32)), axis=-1, keepdims=True)
-    inv = jnp.where(absmax > 0, 127.0 / absmax, 0.0)
-    q = jnp.clip(jnp.round(vec * inv), -127, 127).astype(jnp.int8)
-    return q, (absmax[..., 0] / 127.0)
+    return quantize_rows(vec)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Cache:
@@ -455,15 +537,41 @@ def _store_kv(cache_layer, k, v, pos, int8: bool):
             for kk in cache_layer}
 
 
+def _decode_qkv(p_attn, h, cfg: ModelConfig):
+    """Post-norm hidden (B, D) -> q (B, H, hd), k/v (B, KVH, hd).
+
+    With fused weights (fuse_decode_weights) this is ONE quantized GEMV
+    against ``wqkv`` instead of three — the activation vector is read (and,
+    on the integer/pallas strategies, quantized) once.
+    """
+    b = h.shape[0]
+    hd, nh, kvh = cfg.hd(), cfg.n_heads, cfg.n_kv_heads
+    if "wqkv" in p_attn:
+        qkv = qdot(h, p_attn["wqkv"]).astype(h.dtype)   # (B, (H+2KVH)*hd)
+        q, k, v = jnp.split(qkv, [nh * hd, (nh + kvh) * hd], axis=-1)
+        return (q.reshape(b, nh, hd), k.reshape(b, kvh, hd),
+                v.reshape(b, kvh, hd))
+    q = qeinsum("bd,hkd->bhk", h, p_attn["wq"])
+    k = qeinsum("bd,hkd->bhk", h, p_attn["wk"])
+    v = qeinsum("bd,hkd->bhk", h, p_attn["wv"])
+    return q, k, v
+
+
+def _decode_out_proj(p_attn, out, x_dtype):
+    """Attention output (B, H, hd) -> residual (B, D) via wo (fused: one
+    flat GEMV against ``wo_f``)."""
+    b, nh, hd = out.shape
+    if "wo_f" in p_attn:
+        return qdot(out.reshape(b, nh * hd), p_attn["wo_f"]).astype(x_dtype)
+    return qeinsum("bhk,dhk->bd", out, p_attn["wo"]).astype(x_dtype)
+
+
 def _attn_decode_layer(p, x, cfg: ModelConfig, lcache, pos, rope_cs):
     """x (B, D) single position; lcache holds (B,S,KVH,hd) buffers."""
-    b, _ = x.shape
     hd = cfg.hd()
     int8 = _kv_int8(cfg)
     h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
-    q = qeinsum("bd,hkd->bhk", h, p["attn"]["wq"])
-    k = qeinsum("bd,hkd->bhk", h, p["attn"]["wk"])
-    v = qeinsum("bd,hkd->bhk", h, p["attn"]["wv"])
+    q, k, v = _decode_qkv(p["attn"], h, cfg)
     if rope_cs is not None:
         cos, sin = rope_cs                                   # (B, hd)
         q = L.apply_rope(q, cos[:, None], sin[:, None])
@@ -473,10 +581,113 @@ def _attn_decode_layer(p, x, cfg: ModelConfig, lcache, pos, rope_cs):
     out = L.attention_decode(
         q * (hd ** -0.5), lcache["k"], lcache["v"], pos + 1, acfg,
         lcache.get("ks"), lcache.get("vs"))
-    out = qeinsum("bhk,dhk->bd", out, p["attn"]["wo"])
-    x = x + out.astype(x.dtype)
+    x = x + _decode_out_proj(p["attn"], out, x.dtype)
     x = x + _mlp_or_moe(p, x[:, None, :], cfg, decode=True)[:, 0]
     return x, lcache
+
+
+def supports_paged_cache(cfg: ModelConfig) -> bool:
+    """Paged decode covers the families whose cache is one stacked attn
+    bank (dense / vlm / non-interleaved moe); ssm/hybrid state and the
+    llama4-style interleave keep the dense per-slot reservation."""
+    return (cfg.family in ("dense", "vlm", "moe") and cfg.moe_every <= 1
+            and cfg.n_heads > 0)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, *, block_size: int = 64,
+                     n_blocks: int, max_blocks_per_seq: int) -> Cache:
+    """Block-pool KV cache + page table (serving/paged_cache.py layout).
+
+    Unlike :func:`init_cache`, HBM here is ``n_blocks * block_size`` rows
+    total, shared by all slots through ``page_table`` — a slot owns only
+    the blocks its live length needs (allocator is host-side, in the
+    engine).  ``page_table`` rows are -1 where unassigned."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(f"paged cache unsupported for family {cfg.family}")
+    hd = cfg.hd()
+    kvd = jnp.int8 if _kv_int8(cfg) else _cdt(cfg)
+    pool_shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, hd)
+    attn = {"k": jnp.zeros(pool_shape, kvd), "v": jnp.zeros(pool_shape, kvd)}
+    if _kv_int8(cfg):
+        attn["ks"] = jnp.zeros(pool_shape[:-1], jnp.float32)
+        attn["vs"] = jnp.zeros_like(attn["ks"])
+    return {"lens": jnp.zeros((batch,), jnp.int32),
+            "page_table": jnp.full((batch, max_blocks_per_seq), -1,
+                                   jnp.int32),
+            "attn": attn}
+
+
+def _attn_decode_layer_paged(p, x, cfg: ModelConfig, lcache, pt, pos,
+                             rope_cs):
+    """One decode layer against the block pool.
+
+    lcache: {"k"/"v": (NB, BS, KVH, hd), ["ks"/"vs": (NB, BS, KVH)]};
+    pt: (B, MB) int32 page table; pos: (B,) current lengths.  The new
+    token's K/V scatter into each slot's current (block, offset); released
+    slots (page_table row -1) scatter out-of-bounds and are dropped, so a
+    dead slot can never corrupt blocks reassigned to other sequences."""
+    hd = cfg.hd()
+    int8 = _kv_int8(cfg)
+    h = L.apply_norm(x, p["norm1"], cfg.norm_type, cfg.eps)
+    q, k, v = _decode_qkv(p["attn"], h, cfg)
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = L.apply_rope(q, cos[:, None], sin[:, None])
+        k = L.apply_rope(k, cos[:, None], sin[:, None])
+
+    nb, bs = lcache["k"].shape[0], lcache["k"].shape[1]
+    mb = pt.shape[1]
+    blk_idx = jnp.clip(pos // bs, 0, mb - 1)              # (B,)
+    blk_off = pos % bs
+    blk_id = jnp.take_along_axis(pt, blk_idx[:, None], axis=1)[:, 0]
+    safe = jnp.where(blk_id < 0, nb, blk_id)              # nb = OOB -> drop
+
+    lcache = dict(lcache)
+    if int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        lcache["k"] = lcache["k"].at[safe, blk_off].set(kq, mode="drop")
+        lcache["v"] = lcache["v"].at[safe, blk_off].set(vq, mode="drop")
+        lcache["ks"] = lcache["ks"].at[safe, blk_off].set(ks, mode="drop")
+        lcache["vs"] = lcache["vs"].at[safe, blk_off].set(vs, mode="drop")
+    else:
+        lcache["k"] = lcache["k"].at[safe, blk_off].set(
+            k.astype(lcache["k"].dtype), mode="drop")
+        lcache["v"] = lcache["v"].at[safe, blk_off].set(
+            v.astype(lcache["v"].dtype), mode="drop")
+
+    acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd)
+    out = L.paged_attention_decode(
+        q * (hd ** -0.5), lcache["k"], lcache["v"], pt, pos + 1, acfg,
+        lcache.get("ks"), lcache.get("vs"))
+    x = x + _decode_out_proj(p["attn"], out, x.dtype)
+    x = x + _mlp_or_moe(p, x[:, None, :], cfg, decode=True)[:, 0]
+    return x, lcache
+
+
+def _decode_step_paged(params: Params, cfg: ModelConfig, cache: Cache,
+                       tokens: jax.Array, positions) -> Tuple[jax.Array, Cache]:
+    b = tokens.shape[0]
+    pos = cache["lens"] if positions is None else positions
+    x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
+    rp = pos if cfg.rope_type != "mrope" else jnp.broadcast_to(pos, (3, b))
+    rope_cs = _rope_cos_sin(cfg, rp)
+    pt = cache["page_table"]
+
+    def body(h, inp):
+        lp, lc = inp
+        return _attn_decode_layer_paged(lp, h, cfg, lc, pt, pos, rope_cs)
+
+    x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
+    x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+    logits = L.lm_head(_head_weight(params, cfg), x)
+    new_cache = dict(cache)
+    new_cache["attn"] = new_attn
+    # a slot with no first block is released/empty: pin its length at 0 so
+    # it never re-grows an attention window over garbage between reuses
+    live = pt[:, 0] >= 0
+    new_cache["lens"] = jnp.where(live, pos + 1, 0)
+    return logits, new_cache
 
 
 def _ssm_decode_layer(p, x, cfg: ModelConfig, conv_state, ssm_state):
@@ -489,7 +700,12 @@ def _ssm_decode_layer(p, x, cfg: ModelConfig, conv_state, ssm_state):
 def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
                 tokens: jax.Array, positions: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Cache]:
-    """tokens (B,) int32 -> (logits (B, V) f32, updated cache)."""
+    """tokens (B,) int32 -> (logits (B, V) f32, updated cache).
+
+    A cache carrying a ``page_table`` (init_paged_cache) routes through the
+    paged decode path; the dense per-slot reservation is the default."""
+    if "page_table" in cache:
+        return _decode_step_paged(params, cfg, cache, tokens, positions)
     b = tokens.shape[0]
     pos = cache["lens"] if positions is None else positions  # (B,) int32
     x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))

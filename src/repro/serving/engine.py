@@ -1,4 +1,4 @@
-"""Serving engine: continuous batching over the decode step.
+"""Serving engine: continuous batching over the paged decode step.
 
 The paper serves batch-1 on an FPGA; its §5.2 names batched inference as
 future work.  This engine is that future work: a fixed-slot batch
@@ -6,8 +6,20 @@ future work.  This engine is that future work: a fixed-slot batch
 slot mid-flight and queued requests are prefilling into it — over the
 quantized decode step.
 
-Sampling matches the paper's evaluation setup: temperature 1.0, top-p
-1.0 (A.1), both configurable.
+KV memory is **paged** by default (vLLM-style, serving/paged_cache.py):
+the device cache is a pool of ``page_size``-token blocks shared by every
+slot through a page table, a host-side :class:`BlockAllocator` hands
+blocks to slots as their lengths grow, and decode attention reads K/V
+through the table — so a 30-token sequence in a ``max_seq=4096`` engine
+costs one block, not a 4096-row reservation, and the attention kernel's
+length pruning (kernels/decode_attention.py, paged_decode_attention.py)
+streams only the blocks a sequence actually owns.  Families whose cache
+is not a single attention bank (ssm / hybrid / audio / interleaved-moe)
+fall back to the dense per-slot reservation automatically.
+
+Sampling matches the paper's evaluation setup: temperature 1.0, top-p 1.0
+(A.1) — but each request's ``temperature``/``top_p`` are honored, threaded
+through one vectorized sampler call per step (no per-slot Python loops).
 """
 
 from __future__ import annotations
@@ -15,13 +27,15 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, List, Optional
+from functools import partial
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.serving.paged_cache import BlockAllocator, PagedConfig
 
 
 @dataclasses.dataclass
@@ -36,24 +50,43 @@ class Request:
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    error: Optional[str] = None   # set when the engine rejects the request
 
 
-def sample_logits(key, logits: jax.Array, temperature: float = 1.0,
-                  top_p: float = 1.0) -> jax.Array:
-    """Temperature + nucleus sampling; (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
-    if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        probs = jax.nn.softmax(sorted_logits, axis=-1)
-        csum = jnp.cumsum(probs, axis=-1)
-        # smallest k with cumulative prob >= top_p
-        keep = csum - probs < top_p
-        thresh = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
-                         keepdims=True)
-        logits = jnp.where(logits >= thresh, logits, -jnp.inf)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+def sample_logits(key, logits: jax.Array, temperature=1.0,
+                  top_p=1.0) -> jax.Array:
+    """Temperature + nucleus sampling; (B, V) -> (B,) int32.
+
+    ``temperature``/``top_p`` may be scalars or per-row (B,) arrays — the
+    engine passes one array per batch so heterogeneous requests sample
+    correctly in a single vectorized call.  ``temperature <= 0`` rows are
+    greedy (argmax)."""
+    b = logits.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    p = jnp.maximum(p, 1e-6)                   # keep at least the top token
+
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(t, 1e-6)[:, None]
+    sorted_logits = jnp.sort(scaled, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    csum = jnp.cumsum(probs, axis=-1)
+    # smallest k with cumulative prob >= top_p, per row
+    keep = csum - probs < p[:, None]
+    thresh = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                     keepdims=True)
+    masked = jnp.where(scaled >= thresh, scaled, -jnp.inf)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(t <= 0.0, greedy, sampled)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_pool(leaf, src, blk_ids):
+    """One-shot admission scatter: leaf (L, NB, BS, …) <- src
+    (L, n_blk, BS, …) at pool blocks ``blk_ids``.  Jitted with the pool
+    donated so admission updates in place instead of copying the full
+    pool once per (block, key)."""
+    return leaf.at[:, blk_ids].set(src)
 
 
 class Engine:
@@ -63,10 +96,21 @@ class Engine:
     ``prefill_fn(params, batch, max_seq) -> (logits, cache)`` come from
     the (possibly jitted/sharded) model; the engine itself is pure
     orchestration and identical whether the steps run on 1 CPU or a pod.
+
+    ``cache_kind="paged"`` (default) serves from the block pool when the
+    model family supports it; ``"dense"`` forces the contiguous per-slot
+    reservation.  ``n_pages`` sizes the pool (default: full reservation).
+    Shrinking it oversubscribes: admission defers while the pool is
+    temporarily full and rejects prompts that could never fit (returned
+    from ``run()`` with ``.error`` set); mid-decode growth on an
+    exhausted pool still raises ``OutOfBlocks`` — preemption is a
+    ROADMAP follow-on.
     """
 
     def __init__(self, model: Model, params: Any, max_slots: int = 8,
-                 max_seq: int = 1024, eos_id: int = 2, seed: int = 0):
+                 max_seq: int = 1024, eos_id: int = 2, seed: int = 0,
+                 cache_kind: str = "paged", page_size: int = 64,
+                 n_pages: Optional[int] = None):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -78,7 +122,27 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_slots
-        self.cache = model.init_cache(max_slots, max_seq)
+        self._rejected: List[Request] = []
+
+        self.paged = (cache_kind == "paged"
+                      and model.init_paged_cache is not None)
+        if self.paged:
+            self.page_size = page_size
+            mb = -(-max_seq // page_size)
+            self.n_pages = n_pages or max_slots * mb
+            self.pager = BlockAllocator(PagedConfig(
+                n_layers=model.cfg.n_layers,
+                n_kv_heads=model.cfg.n_kv_heads, head_dim=model.cfg.hd(),
+                block_size=page_size, n_blocks=self.n_pages,
+                max_slots=max_slots, max_blocks_per_seq=mb))
+            self.cache = model.init_paged_cache(
+                max_slots, block_size=page_size, n_blocks=self.n_pages,
+                max_blocks_per_seq=mb)
+            # host mirror of live lengths drives block allocation; device
+            # ``cache["lens"]`` stays authoritative for attention masking.
+            self._host_lens = np.zeros(max_slots, np.int64)
+        else:
+            self.cache = model.init_cache(max_slots, max_seq)
         self.metrics = {"tokens_out": 0, "requests_done": 0,
                         "decode_steps": 0, "t_decode": 0.0}
         self._uid = 0
@@ -92,9 +156,14 @@ class Engine:
         return req.uid
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Serve until queue and slots drain.  Rejected requests (paged
+        pool can never fit the prompt) come back in the done list with
+        ``.error`` set and no output tokens."""
         done: List[Request] = []
         for _ in range(max_steps):
             self._admit()
+            done.extend(self._rejected)
+            self._rejected.clear()
             if not any(self.slots):
                 if not self.queue:
                     break
@@ -102,24 +171,78 @@ class Engine:
             done.extend(self._decode_once())
         return done
 
+    def cache_utilization(self) -> float:
+        """Fraction of the KV pool in use (1.0-slots-full for dense)."""
+        if self.paged:
+            return self.pager.utilization()
+        return sum(r is not None for r in self.slots) / self.max_slots
+
     # -- internals ------------------------------------------------------
     def _admit(self) -> None:
         """Prefill queued requests into free slots (one at a time keeps
         the example simple; a production build batches the prefills)."""
         for i in range(self.max_slots):
-            if self.slots[i] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            p = req.prompt[-self.max_seq + req.max_new_tokens:]
-            logits, pcache = self.model.prefill(
-                self.params, {"tokens": p[None, :]},
-                max_seq=self.max_seq)
-            self._merge_slot_cache(i, pcache, len(p))
-            self.key, sub = jax.random.split(self.key)
-            first = sample_logits(sub, logits, req.temperature, req.top_p)
-            req.output.append(int(first[0]))
-            req.t_first_token = time.perf_counter()
-            self.slots[i] = req
+            while self.slots[i] is None and self.queue:
+                head = self.queue[0]
+                p = head.prompt[-self.max_seq + head.max_new_tokens:]
+                if self.paged:
+                    need = self.pager.blocks_needed(len(p))
+                    if need > self.n_pages:
+                        # can never fit: reject it (delivered through
+                        # run()'s done list with .error set) rather than
+                        # raising and tearing down in-flight requests.
+                        req = self.queue.popleft()
+                        req.error = (f"prompt needs {need} blocks, pool "
+                                     f"holds only {self.n_pages}")
+                        req.t_done = time.perf_counter()
+                        self._rejected.append(req)
+                        continue          # same slot, next queued request
+                    if need > len(self.pager.free):
+                        # pool temporarily full: defer until running
+                        # requests release blocks (they always finish —
+                        # max_new_tokens is bounded — so no livelock).
+                        return
+                req = self.queue.popleft()
+                if self.paged:
+                    # prefill only needs buffers for the prompt itself —
+                    # the pool, not the prefill cache, is the home.
+                    logits, pcache = self.model.prefill(
+                        self.params, {"tokens": p[None, :]}, max_seq=len(p))
+                    self._admit_paged(i, pcache, len(p))
+                else:
+                    logits, pcache = self.model.prefill(
+                        self.params, {"tokens": p[None, :]},
+                        max_seq=self.max_seq)
+                    self._merge_slot_cache(i, pcache, len(p))
+                self.key, sub = jax.random.split(self.key)
+                first = sample_logits(sub, logits, req.temperature,
+                                      req.top_p)
+                req.output.append(int(first[0]))
+                req.t_first_token = time.perf_counter()
+                self.slots[i] = req
+
+    def _admit_paged(self, slot: int, pcache: Any, plen: int) -> None:
+        """Scatter a (1, plen) prefill cache into pool blocks owned by
+        ``slot`` and point its page-table row at them.  One jitted
+        scatter per pool key; the last block's tail pads with zeros
+        (masked by ``lens``, and it scrubs any stale previous owner)."""
+        blocks = self.pager.ensure(slot, plen)
+        bs = self.page_size
+        n_blk = len(blocks)
+        blk_ids = jnp.asarray(blocks, jnp.int32)
+        attn = dict(self.cache["attn"])
+        for kk, full in pcache["attn"].items():
+            src = full[:, 0]                 # (L, plen, KVH[, hd])
+            widths = [(0, 0), (0, n_blk * bs - plen)] + \
+                [(0, 0)] * (src.ndim - 2)
+            src = jnp.pad(src, widths).reshape(
+                src.shape[0], n_blk, bs, *src.shape[2:])
+            attn[kk] = _scatter_pool(attn[kk], src.astype(attn[kk].dtype),
+                                     blk_ids)
+        self.cache["attn"] = attn
+        self.cache["lens"] = self.cache["lens"].at[slot].set(plen)
+        self.cache["page_table"] = jnp.asarray(self.pager.page_table())
+        self._host_lens[slot] = plen
 
     def _merge_slot_cache(self, slot: int, pcache: Any, plen: int) -> None:
         """Copy a (1, …) prefill cache into slot ``slot`` of the batch
@@ -146,18 +269,32 @@ class Engine:
     def _decode_once(self) -> List[Request]:
         tokens = np.zeros((self.max_slots,), np.int32)
         active = np.zeros((self.max_slots,), bool)
+        temps = np.ones((self.max_slots,), np.float32)
+        top_ps = np.ones((self.max_slots,), np.float32)
         for i, req in enumerate(self.slots):
             if req is not None:
                 tokens[i] = req.output[-1]
                 active[i] = True
+                temps[i] = req.temperature
+                top_ps[i] = req.top_p
+
+        if self.paged:
+            # grow block lists for slots crossing a page boundary, then
+            # republish the table (device sees only dense int32 indices).
+            for i in np.nonzero(active)[0]:
+                self.pager.ensure(int(i), int(self._host_lens[i]) + 1)
+            self.cache["page_table"] = jnp.asarray(self.pager.page_table())
 
         t0 = time.perf_counter()
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens))
         self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(sample_logits(sub, logits))
+        nxt = np.asarray(sample_logits(sub, logits, jnp.asarray(temps),
+                                       jnp.asarray(top_ps)))
         self.metrics["decode_steps"] += 1
         self.metrics["t_decode"] += time.perf_counter() - t0
+        if self.paged:
+            self._host_lens[active] += 1
 
         finished: List[Request] = []
         for i, req in enumerate(self.slots):
@@ -173,8 +310,14 @@ class Engine:
                 finished.append(req)
                 self.metrics["requests_done"] += 1
                 self.slots[i] = None
-                # dead slot: zero its length so attention masks it out
+                # dead slot: zero its length so attention masks it out;
+                # paged: hand its blocks back to the pool (the stale
+                # page-table row is republished before the next decode,
+                # and dead-slot writes scatter out-of-bounds -> dropped).
                 self.cache["lens"] = self.cache["lens"].at[i].set(0)
+                if self.paged:
+                    self.pager.release(i)
+                    self._host_lens[i] = 0
         return finished
 
     def throughput_tok_s(self) -> float:

@@ -14,7 +14,14 @@ Design (jit-friendly — all shapes static):
 
 The allocator is host-side Python (like vLLM's scheduler); device code
 only sees dense gathers.  Append of one token touches one (layer, block)
-row.  Supports the Q8_0-quantized pool like the contiguous cache.
+row.  Supports the Q8_0-quantized pool like the contiguous cache
+(``quantized=True`` adds per-(position, kv-head) f32 scale pools).
+
+The serving engine (engine.py) runs on this layout by default: it owns a
+:class:`BlockAllocator` host-side and a device pool built by
+``models.transformer.init_paged_cache``; decode attention reads the pool
+through the page table (``kernels/paged_decode_attention.py`` on TPU, the
+gather view below as the jnp oracle).
 """
 
 from __future__ import annotations
@@ -25,6 +32,8 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.quantization import quantize_rows
 
 
 class OutOfBlocks(RuntimeError):
@@ -41,6 +50,7 @@ class PagedConfig:
     max_slots: int = 8
     max_blocks_per_seq: int = 64
     dtype: str = "float32"
+    quantized: bool = False     # int8 codes + f32 per-(pos, kv-head) scales
 
 
 class BlockAllocator:
@@ -84,28 +94,42 @@ class BlockAllocator:
 def init_pool(cfg: PagedConfig):
     shape = (cfg.n_layers, cfg.n_blocks, cfg.block_size, cfg.n_kv_heads,
              cfg.head_dim)
-    dt = jnp.dtype(cfg.dtype)
-    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    dt = jnp.int8 if cfg.quantized else jnp.dtype(cfg.dtype)
+    pool = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.quantized:
+        pool["ks"] = jnp.zeros(shape[:-1], jnp.float32)
+        pool["vs"] = jnp.zeros_like(pool["ks"])
+    return pool
 
 
 @jax.jit
 def append_token(pool, page_table, lens, k_new, v_new):
     """Write one token's K/V for every layer into each slot's current
     block position.  k_new/v_new: (L, B, KVH, hd); page_table (B, MB);
-    lens (B,) = current length BEFORE the append."""
+    lens (B,) = current length BEFORE the append.  Quantized pools (with
+    "ks"/"vs" scale entries) Q8_0-quantize the new rows on the fly."""
     block_size = pool["k"].shape[2]
     blk_idx = lens // block_size                   # (B,)
     blk_off = lens % block_size
     blk_id = jnp.take_along_axis(page_table, blk_idx[:, None], axis=1)[:, 0]
 
     def write(buf, new):
-        # buf (L, NB, BS, KVH, hd); new (L, B, KVH, hd)
+        # buf (L, NB, BS, KVH, …); new (L, B, KVH, …)
         def per_slot(b, acc):
-            return acc.at[:, blk_id[b], blk_off[b]].set(new[:, b])
+            return acc.at[:, blk_id[b], blk_off[b]].set(
+                new[:, b].astype(acc.dtype))
         return jax.lax.fori_loop(0, new.shape[1], per_slot, buf)
 
-    return ({"k": write(pool["k"], k_new), "v": write(pool["v"], v_new)},
-            lens + 1)
+    out = dict(pool)
+    if "ks" in pool:
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        upd = {"k": kq, "v": vq, "ks": ks, "vs": vs}
+    else:
+        upd = {"k": k_new, "v": v_new}
+    for kk, new in upd.items():
+        out[kk] = write(pool[kk], new)
+    return out, lens + 1
 
 
 @jax.jit
@@ -113,17 +137,21 @@ def gather_view(pool, page_table, lens):
     """Materialize each slot's (L, B, S_max, KVH, hd) contiguous view via
     the page table (S_max = max_blocks_per_seq * block_size).  Attention
     then runs exactly as on the contiguous cache; masked by ``lens``.
+    Quantized pools also return the gathered (L, B, S_max, KVH) scales.
 
-    A production TPU build fuses this gather into the decode-attention
-    kernel (block-sparse BlockSpec index_map); the view form keeps the
-    same numerics and is what the tests validate against."""
+    The production TPU build fuses this gather into the decode-attention
+    kernel (kernels/paged_decode_attention.py dereferences the page table
+    inside its BlockSpec index_map); the view form keeps the same numerics
+    and is what the tests validate against."""
     l, nb, bs, kvh, hd = pool["k"].shape
     b, mbs = page_table.shape
     safe = jnp.maximum(page_table, 0)              # -1 -> 0, masked by lens
-    k = pool["k"][:, safe]                         # (L, B, MB, BS, KVH, hd)
-    v = pool["v"][:, safe]
-    k = k.reshape(l, b, mbs * bs, kvh, hd)
-    v = v.reshape(l, b, mbs * bs, kvh, hd)
+    k = pool["k"][:, safe].reshape(l, b, mbs * bs, kvh, hd)
+    v = pool["v"][:, safe].reshape(l, b, mbs * bs, kvh, hd)
+    if "ks" in pool:
+        ks = pool["ks"][:, safe].reshape(l, b, mbs * bs, kvh)
+        vs = pool["vs"][:, safe].reshape(l, b, mbs * bs, kvh)
+        return k, v, ks, vs
     return k, v
 
 
@@ -138,19 +166,26 @@ class PagedKVCache:
 
     # -- slot lifecycle ---------------------------------------------------
     def admit(self, slot: int, k_prompt, v_prompt) -> None:
-        """k/v_prompt: (L, S_p, KVH, hd) from a prefill."""
+        """k/v_prompt: (L, S_p, KVH, hd) from a prefill (f32; quantized
+        pools Q8_0 them on the way in)."""
         s_p = k_prompt.shape[1]
         blocks = self.alloc.ensure(slot, s_p)
         bs = self.cfg.block_size
-        k = self.pool["k"]
-        v = self.pool["v"]
+        if "ks" in self.pool:
+            kq, ks = quantize_rows(k_prompt)
+            vq, vs = quantize_rows(v_prompt)
+            src = {"k": kq, "v": vq, "ks": ks, "vs": vs}
+        else:
+            src = {"k": k_prompt, "v": v_prompt}
+        pool = dict(self.pool)
         for i, blk in enumerate(blocks):
             lo, hi = i * bs, min((i + 1) * bs, s_p)
             if lo >= s_p:
                 break
-            k = k.at[:, blk, : hi - lo].set(k_prompt[:, lo:hi])
-            v = v.at[:, blk, : hi - lo].set(v_prompt[:, lo:hi])
-        self.pool = {"k": k, "v": v}
+            for kk, full in src.items():
+                pool[kk] = pool[kk].at[:, blk, : hi - lo].set(
+                    full[:, lo:hi].astype(pool[kk].dtype))
+        self.pool = pool
         self.lens[slot] = s_p
 
     def release(self, slot: int) -> None:

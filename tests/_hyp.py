@@ -1,0 +1,30 @@
+"""Optional-hypothesis shim shared by the test suite.
+
+``hypothesis`` is not part of the runtime image.  Importing from here
+keeps the property tests defined (they self-skip when the library is
+missing) without taking the rest of their module down with them:
+
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(*a, **kw):
+        return lambda f: pytest.mark.skip("hypothesis not installed")(f)
+
+    class _AnyStrategy:
+        """Stands in for ``strategies`` so decorator args still evaluate."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()

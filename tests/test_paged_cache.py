@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.models.layers import AttnConfig, attention_decode
 from repro.serving.paged_cache import (BlockAllocator, OutOfBlocks,
@@ -44,9 +45,20 @@ class TestAllocator:
         a.ensure(1, 8)
         assert not set(a.owned[0]) & set(a.owned[1])
 
+    def test_page_table_covers_lengths(self):
+        cases = [[0, 0, 0], [1, 16, 0], [4, 5, 16], [16, 16, 16], [3, 0, 9]]
+        for lens in cases:
+            a = BlockAllocator(_cfg())
+            for s, ln in enumerate(lens):
+                if ln:
+                    a.ensure(s, ln)
+            pt = a.page_table()
+            for s, ln in enumerate(lens):
+                assert (pt[s] >= 0).sum() == a.blocks_needed(ln)
+
     @settings(max_examples=20, deadline=None)
     @given(lens=st.lists(st.integers(0, 16), min_size=3, max_size=3))
-    def test_page_table_covers_lengths(self, lens):
+    def test_page_table_covers_lengths_prop(self, lens):
         a = BlockAllocator(_cfg())
         for s, ln in enumerate(lens):
             if ln:

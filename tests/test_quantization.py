@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (DEFAULT_GROUP_SIZE, PAPER_POLICY, QuantPolicy,
                         QuantizedTensor, choose_group_size, count_bytes,
