@@ -1,0 +1,91 @@
+"""Engine-level serving benchmark: mixed traffic on an oversubscribed pool.
+
+Where kernels_bench tracks single-kernel decode costs, this scenario
+exercises the scheduler subsystem end to end: short and long prompts
+submitted together against a paged pool sized at 3/8 of the full
+reservation, with a chunk budget far below the longest prompt — so the
+run necessarily exhibits chunked prefill interleaved with decodes, block
+recycling, and mid-decode preemption with recompute-on-resume.
+
+Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
+artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
+metrics is chartable across PRs:
+
+  * TTFT p50/p99 (ms) — chunked admission exists to keep the p99 of
+    short requests bounded while long prompts stream in,
+  * decode throughput (tok/s over decode wall-clock),
+  * preemption / prefill-chunk / decode-step counts and pool size —
+    the work the scheduler did to absorb the oversubscription.
+
+CPU wall-clock here is a smoke-level signal (the kernels are jnp paths,
+not the TPU build); the counts are the stable part of the trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+PROMPT_LENS = (8, 72, 12, 64, 10, 80, 9, 48, 16, 96)
+
+
+def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
+        max_new_tokens: int = 16) -> dict:
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    from repro.serving.engine import Engine
+
+    cfg = reduced(get_config("llama2-110m"))
+    model = build_model(cfg)
+    params = model.quantize(model.init(jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+
+    max_slots, max_seq, page_size = 4, 128, 16
+    full_reservation = max_slots * (max_seq // page_size)     # 32 blocks
+    # 3/8 of the full reservation: deep enough oversubscription that
+    # deferral alone cannot absorb it — mid-decode growth must preempt.
+    n_pages = full_reservation * 3 // 8
+    eng = Engine(model, params, max_slots=max_slots, max_seq=max_seq,
+                 page_size=page_size, n_pages=n_pages,
+                 prefill_chunk_tokens=32)
+    for n in PROMPT_LENS:
+        eng.submit(rng.integers(4, 500, size=n).astype(np.int32),
+                   max_new_tokens=max_new_tokens, temperature=0.0)
+    done = eng.run()
+    ok = [r for r in done if r.error is None]
+    assert len(ok) == len(PROMPT_LENS), \
+        [r.error for r in done if r.error is not None]
+    ttft_ms = np.array([(r.t_first_token - r.t_enqueue) for r in ok]) * 1e3
+
+    result = {
+        "requests": len(done),
+        "prompt_lens": list(PROMPT_LENS),
+        "max_new_tokens": max_new_tokens,
+        "n_pages": n_pages,
+        "full_reservation_pages": full_reservation,
+        "prefill_chunk_tokens": 32,
+        "ttft_ms_p50": float(np.percentile(ttft_ms, 50)),
+        "ttft_ms_p99": float(np.percentile(ttft_ms, 99)),
+        "decode_tok_s": eng.throughput_tok_s(),
+        "tokens_out": eng.metrics["tokens_out"],
+        "decode_steps": eng.metrics["decode_steps"],
+        "prefill_chunks": eng.metrics["prefill_chunks"],
+        "preemptions": eng.metrics["preemptions"],
+    }
+    with open(json_path, "w") as fh:
+        json.dump(result, fh, indent=2)
+    if not quiet:
+        print(f"enginebench/ttft_ms_p50,{result['ttft_ms_p50']:.1f},ms")
+        print(f"enginebench/ttft_ms_p99,{result['ttft_ms_p99']:.1f},ms")
+        print(f"enginebench/decode_tok_s,{result['decode_tok_s']:.1f},tok/s")
+        print(f"enginebench/preemptions,{result['preemptions']},count"
+              f" (pool {n_pages}/{full_reservation} blocks,"
+              f" {result['prefill_chunks']} chunks)")
+    return result
+
+
+if __name__ == "__main__":
+    run()

@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: quality,throughput,energy,kernels,"
-                         "decode,roofline")
+                         "decode,engine,roofline")
     ap.add_argument("--quick", action="store_true",
                     help="smaller step/token budgets")
     args = ap.parse_args()
@@ -30,6 +30,9 @@ def main() -> None:
     if "decode" in which or "kernels" in which:
         from benchmarks import kernels_bench
         kernels_bench.run_decode()
+    if "engine" in which:
+        from benchmarks import engine_bench
+        engine_bench.run()
     if "energy" in which:
         from benchmarks import energy
         energy.run()

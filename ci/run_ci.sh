@@ -1,17 +1,24 @@
 #!/usr/bin/env bash
-# Tier-1 CI: full test suite + decode-path benchmarks (interpret mode).
-# Everything runs on CPU — Pallas kernels execute under interpret=True and
-# the decode bench writes BENCH_decode.json for trajectory tracking.
+# Tier-1 CI: full test suite + decode-path and engine-level benchmarks
+# (interpret mode).  Everything runs on CPU — Pallas kernels execute under
+# interpret=True.  Benchmark JSON (BENCH_decode.json, BENCH_engine.json)
+# is emitted into $ARTIFACTS_DIR (default: artifacts/, gitignored) and
+# uploaded by the workflow for trajectory tracking.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export ARTIFACTS_DIR="${ARTIFACTS_DIR:-artifacts}"
+mkdir -p "$ARTIFACTS_DIR"
 
 python -m pytest -q -x
 
 python - <<'EOF'
+import os
 import sys
 sys.path.insert(0, ".")
-from benchmarks import kernels_bench
+from benchmarks import engine_bench, kernels_bench
+art = os.environ.get("ARTIFACTS_DIR", "artifacts")
 kernels_bench.run()
-kernels_bench.run_decode()
+kernels_bench.run_decode(json_path=os.path.join(art, "BENCH_decode.json"))
+engine_bench.run(json_path=os.path.join(art, "BENCH_engine.json"))
 EOF

@@ -9,6 +9,13 @@ HBM.  Standard flash structure on TPU:
   VMEM scratch: running max m, running sum l, accumulator acc
   causal masking prunes fully-masked k-blocks via @pl.when
 
+Chunked prefill (serving/scheduler.py) attends a chunk of S_q queries at
+global positions ``q_offset .. q_offset + S_q - 1`` against S_k >= S_q
+keys (the already-written prefix plus the chunk itself), so the kernel
+supports rectangular q/k extents and a static ``q_offset`` that shifts
+the causal diagonal: block (qi, ki) is skipped when every key in it lies
+strictly above the *offset* diagonal.
+
 The jnp oracle is layers.attention_scores_blockwise (same math, scan
 form); tests sweep shapes and assert allclose in interpret mode.
 """
@@ -29,7 +36,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             block_q: int, block_k: int, n_k_blocks: int, causal: bool,
-            scale: float):
+            scale: float, q_offset: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -39,8 +46,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # causal: skip blocks strictly above the diagonal
-    run = (not causal) or (ki * block_k <= (qi + 1) * block_q - 1)
+    # causal: skip blocks strictly above the (q_offset-shifted) diagonal
+    run = (not causal) or (ki * block_k <= q_offset + (qi + 1) * block_q - 1)
 
     @pl.when(run)
     def _compute():
@@ -51,7 +58,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             q, k, dimension_numbers=(((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)           # (bq, bk)
         if causal:
-            qpos = qi * block_q + jax.lax.broadcasted_iota(
+            qpos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 0)
             kpos = ki * block_k + jax.lax.broadcasted_iota(
                 jnp.int32, (block_q, block_k), 1)
@@ -79,22 +86,32 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                         causal: bool = True, block_q: int = 128,
-                         block_k: int = 128, interpret: bool = False
-                         ) -> jax.Array:
-    """q/k/v: (BH, S, D) flat batch*heads (wrapper repeats GQA KV heads).
-    Returns (BH, S, D) f32; q is scaled by 1/sqrt(D) inside."""
-    bh, s, d = q.shape
-    block_q = min(block_q, s)
-    block_k = min(block_k, s)
-    if s % block_q or s % block_k:
-        raise ValueError(f"S={s} must divide blocks ({block_q},{block_k})")
-    nq, nk = s // block_q, s // block_k
+                         causal: bool = True, q_offset: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: (BH, S_q, D); k/v: (BH, S_k, D) flat batch*heads (wrapper
+    repeats GQA KV heads).  Returns (BH, S_q, D) f32; q is scaled by
+    1/sqrt(D) inside.
+
+    ``q_offset`` gives the global position of q's first row for chunked
+    prefill: query row i attends keys ``<= q_offset + i``.  The one-shot
+    case is ``S_q == S_k, q_offset == 0``."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if causal and q_offset + sq > sk:
+        raise ValueError(f"q_offset {q_offset} + S_q {sq} exceeds S_k {sk}")
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"S_q={sq}/S_k={sk} must divide blocks "
+                         f"({block_q},{block_k})")
+    nq, nk = sq // block_q, sk // block_k
     scale = d ** -0.5
 
     return pl.pallas_call(
         functools.partial(_kernel, block_q=block_q, block_k=block_k,
-                          n_k_blocks=nk, causal=causal, scale=scale),
+                          n_k_blocks=nk, causal=causal, scale=scale,
+                          q_offset=q_offset),
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
@@ -102,7 +119,7 @@ def flash_prefill_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), jnp.float32),
         scratch_shapes=[
             pltpu.VMEM((block_q, 128), jnp.float32),
             pltpu.VMEM((block_q, 128), jnp.float32),

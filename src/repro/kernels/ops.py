@@ -169,25 +169,31 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.reshape(b, h, d)
 
 
-@partial(jax.jit, static_argnames=("causal", "interpret", "block_q",
-                                   "block_k"))
+@partial(jax.jit, static_argnames=("causal", "q_offset", "interpret",
+                                   "block_q", "block_k"))
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                  causal: bool = True, block_q: int = 128,
-                  block_k: int = 128, interpret: bool = False) -> jax.Array:
-    """Full-sequence attention: q (B,S,H,D); k/v (B,S,KVH,D) -> (B,S,H,D).
+                  causal: bool = True, q_offset: int = 0,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """Full-sequence attention: q (B,Sq,H,D); k/v (B,Sk,KVH,D) ->
+    (B,Sq,H,D).
 
     GQA KV heads are repeated to H (XLA keeps it a gather) and the head
-    axis folds into the grid's batch dim; blocks pad via the wrapper."""
-    b, s, h, d = q.shape
+    axis folds into the grid's batch dim; blocks pad via the wrapper.
+    ``Sk > Sq`` with a static ``q_offset`` is the chunked-prefill form:
+    query row i sits at global position ``q_offset + i`` and attends the
+    prefix keys plus its own chunk causally."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
     kvh = k.shape[2]
     hq = h // kvh
     kr = jnp.repeat(k, hq, axis=2)
     vr = jnp.repeat(v, hq, axis=2)
-    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
-    kf = jnp.moveaxis(kr, 2, 1).reshape(b * h, s, d)
-    vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, s, d)
-    bq = _largest_block(s, block_q)
-    bk = _largest_block(s, block_k)
-    out = flash_prefill_pallas(qf, kf, vf, causal=causal, block_q=bq,
-                               block_k=bk, interpret=interpret)
-    return jnp.moveaxis(out.reshape(b, h, s, d), 1, 2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, sq, d)
+    kf = jnp.moveaxis(kr, 2, 1).reshape(b * h, sk, d)
+    vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, sk, d)
+    bq = _largest_block(sq, block_q)
+    bk = _largest_block(sk, block_k)
+    out = flash_prefill_pallas(qf, kf, vf, causal=causal, q_offset=q_offset,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

@@ -29,6 +29,11 @@ class Model:
     # paged serving (vLLM-style block pool); None for families whose cache
     # is not a single attn bank (ssm/hybrid/audio/interleaved-moe).
     init_paged_cache: Optional[Callable[..., Any]] = None
+    # chunked prefill into the paged pool (serving/scheduler.py):
+    # prefill_chunk(params, tokens_chunk, cache, slot, pos_offset)
+    # -> (last-position logits, updated cache).  None when paging is
+    # unsupported.
+    prefill_chunk: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
 
     def quantize(self, params, policy: Optional[QuantPolicy] = None,
                  fuse_decode: bool = True):
@@ -54,9 +59,11 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, c, t, **kw),
             init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
         )
-    paged = None
+    paged = chunk = None
     if transformer.supports_paged_cache(cfg):
         paged = lambda bsz, **kw: transformer.init_paged_cache(cfg, bsz, **kw)
+        chunk = lambda p, t, c, slot, off: transformer.prefill_chunk(
+            p, cfg, t, c, slot, off)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -66,6 +73,7 @@ def build_model(cfg: ModelConfig) -> Model:
             p, cfg, c, t, **kw),
         init_cache=lambda bsz, seq: transformer.init_cache(cfg, bsz, seq),
         init_paged_cache=paged,
+        prefill_chunk=chunk,
     )
 
 

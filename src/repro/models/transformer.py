@@ -19,6 +19,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
@@ -837,3 +838,152 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
 
     logits = L.lm_head(_head_weight(params, cfg), hidden[:, -1])
     return logits, cache
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, tokens_chunk: jax.Array,
+                  cache: Cache, slot: int, pos_offset: int
+                  ) -> Tuple[jax.Array, Cache]:
+    """Prefill one prompt chunk of slot ``slot`` directly into a paged
+    cache (Sarathi/vLLM-style chunked prefill).
+
+    ``tokens_chunk`` holds ``c`` tokens at global positions
+    ``pos_offset .. pos_offset + c - 1``.  The chunk's K/V rows are
+    written into the slot's pool blocks at their (block, offset)
+    coordinates, and its queries attend the ``pos_offset`` prefix rows
+    already in the pool (read back through the page table, dequantized
+    for int8 pools) plus the chunk itself, causally — ``pos_offset`` is
+    threaded into both rope and the causal mask (the jnp oracle's
+    ``q_offset``; kernels/flash_prefill.py carries the same offset on
+    TPU).  Numerics contract, verified by tests/test_scheduler.py:
+
+      * a single chunk covering the whole prompt is **bit-identical** to
+        the one-shot :func:`prefill` (same ops, same shapes);
+      * composed over multiple chunks, every query still reduces over
+        exactly the prefix-plus-own-chunk key set in the same order; the
+        only difference from one-shot is XLA reassociating reductions
+        across the different chunk extents, so float pools match
+        one-shot KV rows and logits to last-ulp tolerance (~1e-6 on
+        f32) with identical greedy streams;
+      * for int8 pools the stored codes match within the +-1 code that
+        last-ulp projection differences can tip across a rounding
+        boundary; cross-chunk attention additionally reads the
+        requantized prefix — the same approximation the decode path
+        already lives with.
+
+    The caller must have grown the slot's block list to cover
+    ``pos_offset + c`` tokens and republished ``cache["page_table"]``
+    before calling (the serving scheduler does both).  Returns the
+    chunk's last-position logits ``(1, V)`` and the updated cache with
+    ``lens[slot] = pos_offset + c``.
+
+    The traced body is jitted with the cache **donated** so each chunk
+    updates the pool in place instead of copying it (the hot property of
+    the admission scatter this replaces); it recompiles per distinct
+    ``(chunk_len, pos_offset)`` pair, which the fixed
+    ``prefill_chunk_tokens`` budget keeps bounded per prompt length.
+    """
+    if "page_table" not in cache:
+        raise ValueError("prefill_chunk requires a paged cache "
+                         "(init_paged_cache)")
+    toks = jnp.asarray(tokens_chunk, jnp.int32).reshape(1, -1)
+    c = toks.shape[1]
+    bs = cache["attn"]["k"].shape[2]
+
+    # Host-side (concrete) addressing: this call's rows live at fixed
+    # (block, offset) coordinates, so the scatter/gather lowers to static
+    # advanced indexing instead of a dynamic per-token loop.
+    pt_row = np.asarray(cache["page_table"][slot])
+    gpos = np.arange(pos_offset, pos_offset + c)
+    if np.any(pt_row[gpos // bs] < 0):
+        raise ValueError(f"slot {slot} page table does not cover rows "
+                         f"[{pos_offset}, {pos_offset + c}) — allocate "
+                         "blocks before prefill_chunk")
+    chunk_blk = jnp.asarray(pt_row[gpos // bs], jnp.int32)      # (c,)
+    chunk_off = jnp.asarray(gpos % bs, jnp.int32)
+    n_pfx = -(-pos_offset // bs)
+    pfx_ids = jnp.asarray(pt_row[:n_pfx], jnp.int32)
+
+    return _prefill_chunk_fn(cfg)(params, cache, toks, chunk_blk,
+                                  chunk_off, pfx_ids, slot=slot,
+                                  pos_offset=pos_offset)
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_chunk_fn(cfg: ModelConfig):
+    """Build (once per config) the jitted, cache-donating chunk step."""
+    hd = cfg.hd()
+    kvh = cfg.n_kv_heads
+    int8 = _kv_int8(cfg)
+    acfg = L.AttnConfig(cfg.n_heads, kvh, hd, causal=True,
+                        q_chunk=cfg.q_chunk)
+
+    @functools.partial(jax.jit, static_argnames=("slot", "pos_offset"),
+                       donate_argnums=(1,))
+    def run(params, cache, toks, chunk_blk, chunk_off, pfx_ids, *,
+            slot: int, pos_offset: int):
+        c = toks.shape[1]
+        bs = cache["attn"]["k"].shape[2]
+        n_pfx = pfx_ids.shape[0]
+
+        positions = jnp.arange(pos_offset, pos_offset + c,
+                               dtype=jnp.int32)[None]
+        if cfg.rope_type == "mrope":
+            positions = jnp.broadcast_to(positions, (3, 1, c))
+        rope_cs = _rope_cos_sin(cfg, positions)
+        x = embed_inputs(params, cfg, {"tokens": toks})
+
+        def body(h, inp):
+            lp, lc = inp
+            hn = L.apply_norm(h, lp["norm1"], cfg.norm_type, cfg.eps)
+            q = qeinsum("bsd,hkd->bshk", hn, lp["attn"]["wq"])
+            k = qeinsum("bsd,hkd->bshk", hn, lp["attn"]["wk"])
+            v = qeinsum("bsd,hkd->bshk", hn, lp["attn"]["wv"])
+            if rope_cs is not None:
+                cos, sin = rope_cs
+                q = L.apply_rope(q, cos[:, :, None], sin[:, :, None])
+                k = L.apply_rope(k, cos[:, :, None], sin[:, :, None])
+            if pos_offset:
+                kp = lc["k"][pfx_ids].reshape(1, n_pfx * bs, kvh, hd)
+                vp = lc["v"][pfx_ids].reshape(1, n_pfx * bs, kvh, hd)
+                if int8:
+                    kp = kp.astype(jnp.float32) * lc["ks"][pfx_ids].reshape(
+                        1, n_pfx * bs, kvh)[..., None]
+                    vp = vp.astype(jnp.float32) * lc["vs"][pfx_ids].reshape(
+                        1, n_pfx * bs, kvh)[..., None]
+                k_all = jnp.concatenate(
+                    [kp[:, :pos_offset].astype(k.dtype), k], axis=1)
+                v_all = jnp.concatenate(
+                    [vp[:, :pos_offset].astype(v.dtype), v], axis=1)
+            else:
+                k_all, v_all = k, v
+            out = L.attention_scores_blockwise(q * (hd ** -0.5), k_all,
+                                               v_all, acfg,
+                                               q_offset=pos_offset)
+            out = qeinsum("bshk,dhk->bsd", out, lp["attn"]["wo"])
+            h = h + out.astype(h.dtype)
+            h = h + _mlp_or_moe(lp, h, cfg)
+
+            lc = dict(lc)
+            if int8:
+                kq_, ks_ = _quantize_kv(k[0])
+                vq_, vs_ = _quantize_kv(v[0])
+                lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(kq_)
+                lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(vq_)
+                lc["ks"] = lc["ks"].at[chunk_blk, chunk_off].set(ks_)
+                lc["vs"] = lc["vs"].at[chunk_blk, chunk_off].set(vs_)
+            else:
+                lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(
+                    k[0].astype(lc["k"].dtype))
+                lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(
+                    v[0].astype(lc["v"].dtype))
+            return h, lc
+
+        x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
+        x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
+        logits = L.lm_head(_head_weight(params, cfg), x[:, -1])
+        new_cache = dict(cache)
+        new_cache["attn"] = new_attn
+        new_cache["lens"] = cache["lens"].at[slot].set(pos_offset + c)
+        return logits, new_cache
+
+    return run

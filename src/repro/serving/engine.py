@@ -1,33 +1,49 @@
-"""Serving engine: continuous batching over the paged decode step.
+"""Serving engine: executes the Scheduler's step plans over the paged pool.
 
 The paper serves batch-1 on an FPGA; its §5.2 names batched inference as
-future work.  This engine is that future work: a fixed-slot batch
-(`max_slots`) with continuous batching — finished sequences release their
-slot mid-flight and queued requests are prefilling into it — over the
-quantized decode step.
+future work.  This engine is that future work, split into two layers:
+
+  * :class:`~repro.serving.scheduler.Scheduler` (serving/scheduler.py)
+    owns *policy*: waiting/running queues, admission (with prompt
+    clamping and never-fits rejection), a per-step plan that carries up
+    to ``prefill_chunk_tokens`` of prompt chunks **plus** every running
+    decode (Sarathi-style chunked prefill — long prompts no longer stall
+    the decode loop), and preemption (newest-first eviction with
+    recompute-on-resume) when mid-decode growth finds the block pool
+    exhausted.
+  * :class:`Engine` (this file) owns *mechanism*: it executes each plan
+    verbatim — prompt chunks via ``model.prefill_chunk`` writing straight
+    into the paged pool (attending the already-written prefix through
+    the page table), running decodes as one batched ``decode_step`` —
+    plus sampling, RNG, timing and metrics.
 
 KV memory is **paged** by default (vLLM-style, serving/paged_cache.py):
 the device cache is a pool of ``page_size``-token blocks shared by every
-slot through a page table, a host-side :class:`BlockAllocator` hands
-blocks to slots as their lengths grow, and decode attention reads K/V
-through the table — so a 30-token sequence in a ``max_seq=4096`` engine
-costs one block, not a 4096-row reservation, and the attention kernel's
-length pruning (kernels/decode_attention.py, paged_decode_attention.py)
-streams only the blocks a sequence actually owns.  Families whose cache
-is not a single attention bank (ssm / hybrid / audio / interleaved-moe)
-fall back to the dense per-slot reservation automatically.
+slot through a page table; the scheduler hands blocks to sequences as
+their lengths grow and takes them back on finish *or preemption*, so an
+oversubscribed pool (``n_pages`` below the full reservation) degrades to
+eviction + recompute instead of raising ``OutOfBlocks``.  Families whose
+cache is not a single attention bank (ssm / hybrid / audio /
+interleaved-moe) fall back to the dense per-slot reservation, where
+prompts are admitted as one whole-prompt chunk and preemption never
+triggers.
 
 Sampling matches the paper's evaluation setup: temperature 1.0, top-p 1.0
 (A.1) — but each request's ``temperature``/``top_p`` are honored, threaded
 through one vectorized sampler call per step (no per-slot Python loops).
+
+Knobs: ``prefill_chunk_tokens`` bounds prompt work per step (the
+prefill/decode interleaving grain); ``page_size``/``n_pages`` size the
+pool.  ``Engine.plan_log`` keeps the executed step plans (uids, chunk
+ranges, preemptions) for inspection — tests assert chunk/decode
+interleaving on it, and benchmarks/engine_bench.py reports preemption
+counts from it.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -36,6 +52,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.scheduler import PrefillChunk, Scheduler
 
 
 @dataclasses.dataclass
@@ -80,17 +97,8 @@ def sample_logits(key, logits: jax.Array, temperature=1.0,
     return jnp.where(t <= 0.0, greedy, sampled)
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _scatter_pool(leaf, src, blk_ids):
-    """One-shot admission scatter: leaf (L, NB, BS, …) <- src
-    (L, n_blk, BS, …) at pool blocks ``blk_ids``.  Jitted with the pool
-    donated so admission updates in place instead of copying the full
-    pool once per (block, key)."""
-    return leaf.at[:, blk_ids].set(src)
-
-
 class Engine:
-    """Single-host continuous-batching engine.
+    """Single-host continuous-batching engine (plan executor).
 
     ``decode_fn(params, cache, tokens) -> (logits, cache)`` and
     ``prefill_fn(params, batch, max_seq) -> (logits, cache)`` come from
@@ -99,18 +107,19 @@ class Engine:
 
     ``cache_kind="paged"`` (default) serves from the block pool when the
     model family supports it; ``"dense"`` forces the contiguous per-slot
-    reservation.  ``n_pages`` sizes the pool (default: full reservation).
-    Shrinking it oversubscribes: admission defers while the pool is
-    temporarily full and rejects prompts that could never fit (returned
-    from ``run()`` with ``.error`` set); mid-decode growth on an
-    exhausted pool still raises ``OutOfBlocks`` — preemption is a
-    ROADMAP follow-on.
+    reservation.  ``n_pages`` sizes the pool (default: full reservation);
+    shrinking it oversubscribes, which the scheduler absorbs by deferring
+    admission and preempting on mid-decode growth.  Requests that could
+    never run (prompt larger than the whole pool, ``max_new_tokens >=
+    max_seq``, empty prompt) come back from :meth:`run` with ``.error``
+    set instead of raising or spinning.
     """
 
     def __init__(self, model: Model, params: Any, max_slots: int = 8,
                  max_seq: int = 1024, eos_id: int = 2, seed: int = 0,
                  cache_kind: str = "paged", page_size: int = 64,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 prefill_chunk_tokens: int = 512):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -120,12 +129,10 @@ class Engine:
         # stable).  Donating the cache avoids a copy per token.
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self.key = jax.random.PRNGKey(seed)
-        self.queue: deque[Request] = deque()
-        self.slots: List[Optional[Request]] = [None] * max_slots
-        self._rejected: List[Request] = []
 
         self.paged = (cache_kind == "paged"
                       and model.init_paged_cache is not None)
+        self.pager: Optional[BlockAllocator] = None
         if self.paged:
             self.page_size = page_size
             mb = -(-max_seq // page_size)
@@ -138,13 +145,15 @@ class Engine:
             self.cache = model.init_paged_cache(
                 max_slots, block_size=page_size, n_blocks=self.n_pages,
                 max_blocks_per_seq=mb)
-            # host mirror of live lengths drives block allocation; device
-            # ``cache["lens"]`` stays authoritative for attention masking.
-            self._host_lens = np.zeros(max_slots, np.int64)
         else:
             self.cache = model.init_cache(max_slots, max_seq)
+        self.scheduler = Scheduler(
+            max_slots=max_slots, max_seq=max_seq, pager=self.pager,
+            prefill_chunk_tokens=prefill_chunk_tokens)
+        self.plan_log: List[Dict[str, Any]] = []
         self.metrics = {"tokens_out": 0, "requests_done": 0,
-                        "decode_steps": 0, "t_decode": 0.0}
+                        "decode_steps": 0, "t_decode": 0.0,
+                        "prefill_chunks": 0, "preemptions": 0}
         self._uid = 0
 
     # -- public API ---------------------------------------------------------
@@ -152,102 +161,85 @@ class Engine:
         self._uid += 1
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
                       t_enqueue=time.perf_counter(), output=[], **kw)
-        self.queue.append(req)
+        self.scheduler.add(req)
         return req.uid
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Serve until queue and slots drain.  Rejected requests (paged
-        pool can never fit the prompt) come back in the done list with
-        ``.error`` set and no output tokens."""
+        """Serve until the scheduler drains.  Rejected requests (clamped
+        ``max_new_tokens``, empty prompt, or a sequence the pool could
+        never hold) come back in the done list with ``.error`` set."""
         done: List[Request] = []
         for _ in range(max_steps):
-            self._admit()
-            done.extend(self._rejected)
-            self._rejected.clear()
-            if not any(self.slots):
-                if not self.queue:
-                    break
-                continue
-            done.extend(self._decode_once())
+            if not self.scheduler.has_work():
+                break
+            plan = self.scheduler.schedule()
+            now = time.perf_counter()
+            for req in plan.rejected:
+                req.t_done = now
+                done.append(req)
+            if not plan.made_progress():
+                # the scheduler's contract is defer-preempt-or-reject; an
+                # idle plan with work pending means that contract broke —
+                # fail loudly instead of burning max_steps doing nothing
+                # (the seed engine spun here).
+                raise RuntimeError(
+                    "scheduler made no progress with work pending "
+                    f"(waiting={len(self.scheduler.waiting)}, "
+                    f"running={len(self.scheduler.running)})")
+            self.plan_log.append(plan.summary())
+            self.metrics["preemptions"] = self.scheduler.n_preempted
+            if self.paged and plan.has_work():
+                # one republish per step covers this step's allocations
+                # and any releases (finish/preempt) since the last one.
+                self.cache["page_table"] = jnp.asarray(
+                    self.pager.page_table())
+            for chunk in plan.prefills:
+                self._run_chunk(chunk)
+            if plan.decodes:
+                done.extend(self._decode_once(plan.decodes))
         return done
 
     def cache_utilization(self) -> float:
-        """Fraction of the KV pool in use (1.0-slots-full for dense)."""
+        """Fraction of the KV pool in use (slots-occupied for dense)."""
         if self.paged:
             return self.pager.utilization()
-        return sum(r is not None for r in self.slots) / self.max_slots
+        return len(self.scheduler.running) / self.max_slots
+
+    def throughput_tok_s(self) -> float:
+        t = self.metrics["t_decode"]
+        return self.metrics["tokens_out"] / t if t > 0 else 0.0
 
     # -- internals ------------------------------------------------------
-    def _admit(self) -> None:
-        """Prefill queued requests into free slots (one at a time keeps
-        the example simple; a production build batches the prefills)."""
-        for i in range(self.max_slots):
-            while self.slots[i] is None and self.queue:
-                head = self.queue[0]
-                p = head.prompt[-self.max_seq + head.max_new_tokens:]
-                if self.paged:
-                    need = self.pager.blocks_needed(len(p))
-                    if need > self.n_pages:
-                        # can never fit: reject it (delivered through
-                        # run()'s done list with .error set) rather than
-                        # raising and tearing down in-flight requests.
-                        req = self.queue.popleft()
-                        req.error = (f"prompt needs {need} blocks, pool "
-                                     f"holds only {self.n_pages}")
-                        req.t_done = time.perf_counter()
-                        self._rejected.append(req)
-                        continue          # same slot, next queued request
-                    if need > len(self.pager.free):
-                        # pool temporarily full: defer until running
-                        # requests release blocks (they always finish —
-                        # max_new_tokens is bounded — so no livelock).
-                        return
-                req = self.queue.popleft()
-                if self.paged:
-                    # prefill only needs buffers for the prompt itself —
-                    # the pool, not the prefill cache, is the home.
-                    logits, pcache = self.model.prefill(
-                        self.params, {"tokens": p[None, :]}, max_seq=len(p))
-                    self._admit_paged(i, pcache, len(p))
-                else:
-                    logits, pcache = self.model.prefill(
-                        self.params, {"tokens": p[None, :]},
-                        max_seq=self.max_seq)
-                    self._merge_slot_cache(i, pcache, len(p))
+    def _run_chunk(self, chunk: PrefillChunk) -> None:
+        """Execute one planned prompt chunk (paged: straight into the
+        pool; dense: whole-prompt prefill merged into the slot)."""
+        seq, req = chunk.seq, chunk.seq.req
+        toks = jnp.asarray(seq.tokens[chunk.start:chunk.end], jnp.int32)
+        if self.paged:
+            logits, self.cache = self.model.prefill_chunk(
+                self.params, toks, self.cache, seq.slot, chunk.start)
+        else:
+            logits, pcache = self.model.prefill(
+                self.params, {"tokens": toks[None, :]},
+                max_seq=self.max_seq)
+            self._merge_slot_cache(seq.slot, pcache, chunk.end)
+        self.metrics["prefill_chunks"] += 1
+        if chunk.last:
+            if seq.resuming:
+                # recompute-on-resume: the token after this prefix was
+                # already sampled before preemption; decode re-feeds it.
+                seq.resuming = False
+            else:
                 self.key, sub = jax.random.split(self.key)
                 first = sample_logits(sub, logits, req.temperature,
                                       req.top_p)
                 req.output.append(int(first[0]))
                 req.t_first_token = time.perf_counter()
-                self.slots[i] = req
-
-    def _admit_paged(self, slot: int, pcache: Any, plen: int) -> None:
-        """Scatter a (1, plen) prefill cache into pool blocks owned by
-        ``slot`` and point its page-table row at them.  One jitted
-        scatter per pool key; the last block's tail pads with zeros
-        (masked by ``lens``, and it scrubs any stale previous owner)."""
-        blocks = self.pager.ensure(slot, plen)
-        bs = self.page_size
-        n_blk = len(blocks)
-        blk_ids = jnp.asarray(blocks, jnp.int32)
-        attn = dict(self.cache["attn"])
-        for kk, full in pcache["attn"].items():
-            src = full[:, 0]                 # (L, plen, KVH[, hd])
-            widths = [(0, 0), (0, n_blk * bs - plen)] + \
-                [(0, 0)] * (src.ndim - 2)
-            src = jnp.pad(src, widths).reshape(
-                src.shape[0], n_blk, bs, *src.shape[2:])
-            attn[kk] = _scatter_pool(attn[kk], src.astype(attn[kk].dtype),
-                                     blk_ids)
-        self.cache["attn"] = attn
-        self.cache["lens"] = self.cache["lens"].at[slot].set(plen)
-        self.cache["page_table"] = jnp.asarray(self.pager.page_table())
-        self._host_lens[slot] = plen
 
     def _merge_slot_cache(self, slot: int, pcache: Any, plen: int) -> None:
-        """Copy a (1, …) prefill cache into slot ``slot`` of the batch
-        cache.  Buffer layouts put batch right after the layer-stack dims,
-        so we match on dim position by name."""
+        """Copy a (1, …) prefill cache into slot ``slot`` of the dense
+        batch cache.  Buffer layouts put batch right after the
+        layer-stack dims, so we match on dim position by name."""
         def merge(dst, src, path=""):
             if isinstance(dst, dict):
                 return {k: merge(dst[k], src[k], path + "/" + k)
@@ -266,24 +258,19 @@ class Engine:
             return dst
         self.cache = merge(self.cache, pcache)
 
-    def _decode_once(self) -> List[Request]:
+    def _decode_once(self, slots: List[int]) -> List[Request]:
+        """One batched decode step for the planned ``slots``.  The device
+        step touches every row; rows outside ``slots`` (free slots, or a
+        mid-prefill sequence whose next chunk overwrites the same
+        position) are ignored and their lengths re-synced after."""
         tokens = np.zeros((self.max_slots,), np.int32)
-        active = np.zeros((self.max_slots,), bool)
         temps = np.ones((self.max_slots,), np.float32)
         top_ps = np.ones((self.max_slots,), np.float32)
-        for i, req in enumerate(self.slots):
-            if req is not None:
-                tokens[i] = req.output[-1]
-                active[i] = True
-                temps[i] = req.temperature
-                top_ps[i] = req.top_p
-
-        if self.paged:
-            # grow block lists for slots crossing a page boundary, then
-            # republish the table (device sees only dense int32 indices).
-            for i in np.nonzero(active)[0]:
-                self.pager.ensure(int(i), int(self._host_lens[i]) + 1)
-            self.cache["page_table"] = jnp.asarray(self.pager.page_table())
+        for i in slots:
+            req = self.scheduler.running[i].req
+            tokens[i] = req.output[-1]
+            temps[i] = req.temperature
+            top_ps[i] = req.top_p
 
         t0 = time.perf_counter()
         logits, self.cache = self._decode(
@@ -293,33 +280,25 @@ class Engine:
                                        jnp.asarray(top_ps)))
         self.metrics["decode_steps"] += 1
         self.metrics["t_decode"] += time.perf_counter() - t0
-        if self.paged:
-            self._host_lens[active] += 1
 
         finished: List[Request] = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
+        for i in slots:
+            seq = self.scheduler.running[i]
+            req = seq.req
             tok = int(nxt[i])
             req.output.append(tok)
             self.metrics["tokens_out"] += 1
-            plen = len(req.prompt) + len(req.output)
             if tok == self.eos_id or len(req.output) >= req.max_new_tokens \
-                    or plen >= self.max_seq - 1:
+                    or seq.kv_len >= self.max_seq - 1:
                 req.t_done = time.perf_counter()
                 finished.append(req)
                 self.metrics["requests_done"] += 1
-                self.slots[i] = None
-                # dead slot: zero its length so attention masks it out;
-                # paged: hand its blocks back to the pool (the stale
-                # page-table row is republished before the next decode,
-                # and dead-slot writes scatter out-of-bounds -> dropped).
-                self.cache["lens"] = self.cache["lens"].at[i].set(0)
-                if self.paged:
-                    self.pager.release(i)
-                    self._host_lens[i] = 0
+                self.scheduler.finish(i)
+        # the scheduler's lengths are authoritative: decoded rows were
+        # advanced at planning time, finished/free rows drop to 0, and a
+        # mid-prefill row whose position the batched step bumped gets its
+        # prefill progress back (its garbage KV row is overwritten by the
+        # next chunk, or dropped when the block isn't allocated yet).
+        self.cache["lens"] = jnp.asarray(self.scheduler.device_lens(),
+                                         jnp.int32)
         return finished
-
-    def throughput_tok_s(self) -> float:
-        t = self.metrics["t_decode"]
-        return self.metrics["tokens_out"] / t if t > 0 else 0.0

@@ -64,6 +64,18 @@ class BlockAllocator:
     def blocks_needed(self, length: int) -> int:
         return -(-length // self.cfg.block_size)
 
+    def can_allocate(self, slot: int, length: int) -> bool:
+        """True iff :meth:`ensure`\\ (slot, length) would succeed right now.
+
+        The scheduler uses this to decide between admitting a prefill
+        chunk, deferring it, and preempting a victim — without ever
+        tripping :class:`OutOfBlocks` on the serving path."""
+        need = self.blocks_needed(length) - len(self.owned[slot])
+        return need <= len(self.free)
+
+    def n_free(self) -> int:
+        return len(self.free)
+
     def ensure(self, slot: int, length: int) -> List[int]:
         """Grow slot's block list to cover ``length`` tokens."""
         need = self.blocks_needed(length)
@@ -76,6 +88,11 @@ class BlockAllocator:
         return cur
 
     def release(self, slot: int) -> None:
+        """Return every block owned by ``slot`` to the free list.
+
+        Used both when a sequence finishes and when the scheduler preempts
+        it (the request keeps its generated tokens host-side and its KV is
+        recomputed on resume, so no block content needs to survive)."""
         self.free.extend(reversed(self.owned[slot]))
         self.owned[slot] = []
 

@@ -1,0 +1,326 @@
+"""Continuous-batching scheduler: chunked prefill, mixed steps, preemption.
+
+The engine (engine.py) used to fold queueing, admission, prefill, decode,
+sampling and metrics into one class, admitting one *full-prompt* prefill
+at a time — a long prompt monopolized the device while every running
+decode stalled, and mid-decode growth on an oversubscribed pool raised
+``OutOfBlocks``.  This module extracts the policy half of that engine
+into an explicit Sarathi/vLLM-style scheduler:
+
+  * **Queues.**  ``waiting`` (FIFO of not-yet-admitted sequences, with
+    preempted sequences requeued at the *front*) and ``running`` (slot ->
+    :class:`Sequence`).  The engine never touches them directly; it asks
+    for a plan.
+  * **Step plans.**  :meth:`Scheduler.schedule` emits a :class:`StepPlan`
+    carrying (a) every running decode and (b) up to
+    ``prefill_chunk_tokens`` of prompt-chunk work, so long prompts are
+    prefilled in fixed-size chunks *interleaved* with decode steps
+    instead of ahead of them.  The engine executes the plan verbatim:
+    chunks via ``model.prefill_chunk`` against the paged pool, decodes as
+    one batched step.
+  * **Preemption.**  When a decode needs to grow into a new block and the
+    pool is exhausted, the newest-admitted sequence is preempted: its
+    blocks go back to the pool (``BlockAllocator.release``), the request
+    keeps its generated tokens host-side, and it is requeued for
+    recompute-on-resume — re-prefilled over ``prompt + output[:-1]``
+    (chunked, under the same budget), after which decode resumes by
+    re-feeding ``output[-1]``.  ``OutOfBlocks`` can no longer reach the
+    serving path: the scheduler only grows through
+    ``BlockAllocator.can_allocate``.
+  * **Progress guarantee.**  Every plan either does work, preempts, or
+    rejects a request with ``.error`` (never-fits prompts, oversized
+    ``max_new_tokens``, empty prompts) — the engine raises if a plan
+    makes no progress while work remains, instead of spinning.
+
+The dense (non-paged) fallback uses the same scheduler with ``pager=None``:
+prompts are planned as one whole-prompt chunk (the contiguous cache has
+no block granularity to chunk into) and preemption never triggers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.paged_cache import BlockAllocator
+
+
+@dataclasses.dataclass
+class Sequence:
+    """Scheduler-side state for one request (waiting or running)."""
+
+    req: Any                                 # serving.engine.Request
+    prompt: Optional[np.ndarray] = None      # admitted (clamped) prompt
+    tokens: Optional[np.ndarray] = None      # rows to prefill this run
+    slot: int = -1
+    prefilled: int = 0                       # prefill rows already in the pool
+    kv_len: int = 0                          # total pool rows (grows in decode)
+    order: int = -1                          # admission stamp (victims: newest)
+    resuming: bool = False                   # recompute-after-preemption
+
+    @property
+    def prefill_done(self) -> bool:
+        return self.tokens is not None and self.prefilled >= len(self.tokens)
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One prompt chunk: rows [start, end) of ``seq.tokens``."""
+
+    seq: Sequence
+    start: int
+    end: int
+
+    @property
+    def last(self) -> bool:
+        return self.end >= len(self.seq.tokens)
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What the engine must execute this step (then plans are discarded —
+    the scheduler already advanced its accounting, so a plan is executed
+    exactly once, synchronously)."""
+
+    prefills: List[PrefillChunk] = dataclasses.field(default_factory=list)
+    decodes: List[int] = dataclasses.field(default_factory=list)   # slot ids
+    decode_uids: List[int] = dataclasses.field(default_factory=list)
+    preempted: List[int] = dataclasses.field(default_factory=list)  # uids
+    rejected: List[Any] = dataclasses.field(default_factory=list)  # Requests
+
+    def has_work(self) -> bool:
+        return bool(self.prefills or self.decodes)
+
+    def made_progress(self) -> bool:
+        return bool(self.prefills or self.decodes or self.preempted
+                    or self.rejected)
+
+    def summary(self) -> Dict[str, Any]:
+        """Compact, host-only trace entry (engine.plan_log; tests assert
+        chunk/decode interleaving on it)."""
+        return {
+            "prefills": [(c.seq.req.uid, c.start, c.end)
+                         for c in self.prefills],
+            "decodes": list(self.decode_uids),
+            "preempted": list(self.preempted),
+            "rejected": [r.uid for r in self.rejected],
+        }
+
+
+class Scheduler:
+    """Owns admission, chunking, growth and preemption policy.
+
+    ``pager`` is the engine's host-side :class:`BlockAllocator` for the
+    paged pool (None for the dense fallback).  The scheduler is the only
+    component that allocates/releases blocks; the engine republishes the
+    page table once per step and executes plans.
+    """
+
+    def __init__(self, max_slots: int, max_seq: int,
+                 pager: Optional[BlockAllocator] = None,
+                 prefill_chunk_tokens: int = 512):
+        if prefill_chunk_tokens < 1:
+            raise ValueError("prefill_chunk_tokens must be >= 1")
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.pager = pager
+        self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.waiting: Deque[Sequence] = deque()
+        self.running: Dict[int, Sequence] = {}
+        self.n_preempted = 0
+        self._order = 0
+
+    # -- public API ------------------------------------------------------
+    def add(self, req: Any) -> None:
+        self.waiting.append(Sequence(req=req))
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def device_lens(self) -> np.ndarray:
+        """Authoritative per-slot KV lengths (0 for free slots)."""
+        lens = np.zeros(self.max_slots, np.int64)
+        for slot, seq in self.running.items():
+            lens[slot] = seq.kv_len
+        return lens
+
+    def finish(self, slot: int) -> None:
+        """A sequence completed: release its blocks and free the slot."""
+        self.running.pop(slot)
+        if self.pager is not None:
+            self.pager.release(slot)
+
+    def schedule(self) -> StepPlan:
+        """Build this step's plan; mutates allocator + queue state.
+
+        Order matters: decodes first (they may preempt), then prefill
+        chunks for already-running sequences, then admissions — all under
+        one ``prefill_chunk_tokens`` budget.  Chunk planning never
+        preempts; it defers until decodes release blocks.  A final guard
+        breaks prefill-vs-prefill block deadlock by preempting the
+        newest sequence.
+        """
+        plan = StepPlan()
+
+        # ---- decodes: every running seq past prefill, oldest first ----
+        cands = sorted(self.running.values(), key=lambda s: s.order)
+        for seq in cands:
+            if self.running.get(seq.slot) is not seq or not seq.prefill_done:
+                continue                     # preempted earlier this step
+            if not self._grow_for_decode(seq, plan):
+                continue                     # seq itself preempted / failed
+            plan.decodes.append(seq.slot)
+            plan.decode_uids.append(seq.req.uid)
+            seq.kv_len += 1                  # the planned step will write it
+        if plan.decodes:                     # keep the parallel lists paired
+            plan.decodes, plan.decode_uids = map(list, zip(
+                *sorted(zip(plan.decodes, plan.decode_uids))))
+
+        # ---- prefill chunks under the token budget --------------------
+        budget = self.prefill_chunk_tokens
+        for seq in sorted(self.running.values(), key=lambda s: s.order):
+            if budget <= 0:
+                break
+            if self.running.get(seq.slot) is not seq or seq.prefill_done:
+                continue
+            budget -= self._plan_chunk(seq, budget, plan)
+
+        # ---- admissions (FIFO; head-of-line blocks, preserving order) -
+        while (budget > 0 and self.waiting
+               and len(self.running) < self.max_slots):
+            seq = self.waiting[0]
+            err = self._admission_error(seq)
+            if err is not None:
+                self.waiting.popleft()
+                seq.req.error = err
+                plan.rejected.append(seq.req)
+                continue
+            first = min(len(seq.tokens), budget)
+            if self.pager is not None:
+                first = min(first,
+                            self.pager.n_free() * self.pager.cfg.block_size)
+            if first <= 0:
+                break          # pool temporarily full: defer until released
+            self.waiting.popleft()
+            seq.slot = min(set(range(self.max_slots)) - set(self.running))
+            seq.order = self._order
+            self._order += 1
+            self.running[seq.slot] = seq
+            budget -= self._plan_chunk(seq, budget, plan)
+
+        # ---- deadlock guard: all running mid-prefill, no blocks, no
+        # decodes -> evict the newest so the older prefill can proceed --
+        if not plan.has_work() and self.running:
+            self._preempt(self._newest_running(), plan)
+        return plan
+
+    # -- internals -------------------------------------------------------
+    def _admission_error(self, seq: Sequence) -> Optional[str]:
+        """Validate (and on first admission, clamp) a sequence; returns an
+        error string to reject with, or None."""
+        req = seq.req
+        if seq.tokens is None:
+            keep = self.max_seq - req.max_new_tokens
+            if req.max_new_tokens < 1:
+                return f"max_new_tokens={req.max_new_tokens} must be >= 1"
+            if keep <= 0:
+                # the seed engine's `prompt[-max_seq + max_new_tokens:]`
+                # silently flipped to a positive-index slice here, keeping
+                # almost nothing; clamp and reject instead.
+                return (f"max_new_tokens={req.max_new_tokens} leaves no "
+                        f"room for any prompt within max_seq={self.max_seq}")
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            if prompt.size == 0:
+                return "empty prompt"
+            if prompt.size > keep:
+                prompt = prompt[-keep:]
+            seq.prompt = prompt
+            seq.tokens = prompt
+        if self.pager is not None:
+            need = self.pager.blocks_needed(len(seq.tokens))
+            if need > self.pager.cfg.n_blocks:
+                return (f"sequence needs {need} blocks, pool holds only "
+                        f"{self.pager.cfg.n_blocks}")
+        return None
+
+    def _newest_running(self) -> Sequence:
+        return max(self.running.values(), key=lambda s: s.order)
+
+    def _grow_for_decode(self, seq: Sequence, plan: StepPlan) -> bool:
+        """Make room for one more KV row; True iff ``seq`` may decode.
+
+        Preempts newest-first until the growth fits.  If ``seq`` itself is
+        the newest, it is preempted (recompute-on-resume) — unless even an
+        empty pool could not hold it, in which case it fails with
+        ``.error`` (it could never complete)."""
+        if self.pager is None:
+            return True
+        while not self.pager.can_allocate(seq.slot, seq.kv_len + 1):
+            victim = self._newest_running()
+            if victim is seq:
+                whole_pool = self.pager.cfg.n_blocks
+                if self.pager.blocks_needed(seq.kv_len + 1) > whole_pool:
+                    self.running.pop(seq.slot)
+                    self.pager.release(seq.slot)
+                    seq.req.error = (
+                        f"sequence grew to {seq.kv_len + 1} tokens "
+                        f"({self.pager.blocks_needed(seq.kv_len + 1)} "
+                        f"blocks) — more than the whole "
+                        f"{whole_pool}-block pool")
+                    plan.rejected.append(seq.req)
+                    return False
+                self._preempt(seq, plan)
+                return False
+            self._preempt(victim, plan)
+        self.pager.ensure(seq.slot, seq.kv_len + 1)
+        return True
+
+    def _plan_chunk(self, seq: Sequence, budget: int, plan: StepPlan) -> int:
+        """Plan the next prompt chunk for ``seq`` under ``budget`` tokens;
+        returns the number of tokens planned (0 = deferred)."""
+        start = seq.prefilled
+        end = min(len(seq.tokens), start + budget)
+        if self.pager is None:
+            # dense fallback: the contiguous cache is filled by one-shot
+            # prefill, so the "chunk" is always the whole prompt.
+            end = len(seq.tokens)
+        elif not self.pager.can_allocate(seq.slot, end):
+            fit = (len(self.pager.owned[seq.slot]) + self.pager.n_free()) \
+                * self.pager.cfg.block_size
+            end = min(end, fit)
+        if end <= start:
+            return 0
+        if self.pager is not None:
+            self.pager.ensure(seq.slot, end)
+        plan.prefills.append(PrefillChunk(seq=seq, start=start, end=end))
+        seq.prefilled = end
+        seq.kv_len = end
+        return end - start
+
+    def _preempt(self, seq: Sequence, plan: StepPlan) -> None:
+        """Evict ``seq``: blocks back to the pool, request requeued at the
+        front of ``waiting`` with its generated tokens preserved.  On
+        resume its KV is recomputed (chunked) over ``prompt +
+        output[:-1]``; the final sampled token has no KV yet and is
+        re-fed as the next decode input (``resuming`` suppresses the
+        duplicate first-token sample)."""
+        if self.pager is not None:
+            self.pager.release(seq.slot)
+        self.running.pop(seq.slot)
+        out = list(seq.req.output or [])
+        if out:
+            seq.tokens = np.concatenate(
+                [seq.prompt, np.asarray(out[:-1], np.int32)])
+            seq.resuming = True
+        else:
+            seq.tokens = seq.prompt
+            seq.resuming = False
+        seq.slot = -1
+        seq.prefilled = 0
+        seq.kv_len = 0
+        self.n_preempted += 1
+        plan.preempted.append(seq.req.uid)
+        self.waiting.appendleft(seq)

@@ -1,0 +1,430 @@
+"""Scheduler subsystem: chunked prefill numerics, step-plan structure,
+preemption over an oversubscribed pool, and admission clamping.
+
+Covers the PR-2 acceptance criteria:
+  * ``prefill_chunk`` composed over 2+ chunks matches the one-shot
+    ``prefill`` (single chunk: bit-identical; multi-chunk: last-ulp
+    reduction-order tolerance with bit-identical first-layer KV rows and
+    identical greedy streams) for f32 and int8 pools,
+  * a prompt longer than ``prefill_chunk_tokens`` is admitted in chunks
+    while decode steps for running slots continue between chunks
+    (asserted via step-plan inspection),
+  * shrinking ``n_pages`` below the full reservation no longer raises
+    ``OutOfBlocks`` — preempted requests finish with outputs identical
+    to an uncontended run under greedy sampling,
+  * the seed engine's truncation bug (``max_new_tokens >= max_seq``
+    silently flipping the prompt slice positive) now rejects with
+    ``.error``, and the no-progress spin-loop is gone (defer / preempt /
+    reject, never idle).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.scheduler import Scheduler, Sequence
+
+
+def _f32_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(compute_dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _int8_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(
+        compute_dtype="float32", kv_cache_dtype="int8")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _chunked_prefill(m, params, prompt, splits, bs=8, n_blocks=16, slot=1):
+    """Run prefill_chunk over the given chunk sizes; returns (logits,
+    pool cache, page table row blocks)."""
+    mb = 8
+    alloc = BlockAllocator(PagedConfig(
+        n_layers=m.cfg.n_layers, n_kv_heads=m.cfg.n_kv_heads,
+        head_dim=m.cfg.hd(), block_size=bs, n_blocks=n_blocks,
+        max_slots=2, max_blocks_per_seq=mb))
+    cache = m.init_paged_cache(2, block_size=bs, n_blocks=n_blocks,
+                               max_blocks_per_seq=mb)
+    off, logits = 0, None
+    for c in splits:
+        end = min(off + c, len(prompt))
+        if end <= off:
+            break
+        alloc.ensure(slot, end)
+        cache = dict(cache)
+        cache["page_table"] = jnp.asarray(alloc.page_table())
+        logits, cache = m.prefill_chunk(
+            params, jnp.asarray(prompt[off:end]), cache, slot, off)
+        off = end
+    blocks = [b for b in np.asarray(cache["page_table"][slot]) if b >= 0]
+    return logits, cache, blocks
+
+
+def _slot_rows(cache, blocks, plen, key="k"):
+    pool = np.asarray(cache["attn"][key])
+    nl, _, bs = pool.shape[:3]
+    return pool[:, blocks].reshape(nl, len(blocks) * bs,
+                                   *pool.shape[3:])[:, :plen]
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill vs one-shot
+# ---------------------------------------------------------------------------
+
+
+def test_single_chunk_bit_exact_vs_oneshot_f32():
+    m, params = _f32_model()
+    rng = np.random.default_rng(0)
+    plen = 21
+    prompt = rng.integers(4, 500, size=plen).astype(np.int32)
+    l_one, pcache = m.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                              max_seq=plen)
+    l_chunk, cache, blocks = _chunked_prefill(m, params, prompt, [plen])
+    assert bool(jnp.all(l_one == l_chunk)), \
+        "whole-prompt chunk must be bit-identical to one-shot prefill"
+    for kk in ("k", "v"):
+        np.testing.assert_array_equal(
+            _slot_rows(cache, blocks, plen, kk),
+            np.asarray(pcache["attn"][kk])[:, 0])
+
+
+@pytest.mark.parametrize("splits", [[8, 5, 8], [16, 5], [1, 20], [7, 7, 7]])
+def test_multi_chunk_matches_oneshot_f32(splits):
+    """Composed chunks reduce over the same key sets in the same order;
+    only XLA reassociating reductions across the different chunk extents
+    remains — stored KV rows and final logits agree to last-ulp
+    tolerance with the same argmax."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(1)
+    plen = 21
+    prompt = rng.integers(4, 500, size=plen).astype(np.int32)
+    l_one, pcache = m.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                              max_seq=plen)
+    l_chunk, cache, blocks = _chunked_prefill(m, params, prompt, splits)
+    for kk in ("k", "v"):
+        np.testing.assert_allclose(
+            _slot_rows(cache, blocks, plen, kk),
+            np.asarray(pcache["attn"][kk])[:, 0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(l_chunk), np.asarray(l_one),
+                               rtol=1e-5, atol=1e-5)
+    assert int(jnp.argmax(l_chunk)) == int(jnp.argmax(l_one))
+
+
+def test_multi_chunk_int8_pool_stores_matching_codes():
+    """Quantized pools: row-wise Q8_0 is deterministic, so chunked and
+    one-shot prefill agree on every stored code up to the +-1 step that a
+    last-ulp projection difference can tip over a rounding boundary;
+    cross-chunk attention reads the requantized prefix, so logits carry
+    the usual int8 tolerance."""
+    m, params = _int8_model()
+    rng = np.random.default_rng(2)
+    plen = 19
+    prompt = rng.integers(4, 500, size=plen).astype(np.int32)
+    l_one, pcache = m.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                              max_seq=plen)
+    l_chunk, cache, blocks = _chunked_prefill(m, params, prompt, [8, 6, 8])
+    # layer 0 sees no attention upstream, so its rows isolate the Q8_0
+    # round trip; deeper layers also carry the requantized-prefix
+    # attention and are covered by the logits tolerance below.
+    for kk in ("k", "v"):
+        got = _slot_rows(cache, blocks, plen, kk)[0].astype(np.int32)
+        want = np.asarray(pcache["attn"][kk])[0, 0].astype(np.int32)
+        assert np.abs(got - want).max() <= 1
+    for kk in ("ks", "vs"):
+        np.testing.assert_allclose(
+            _slot_rows(cache, blocks, plen, kk)[0],
+            np.asarray(pcache["attn"][kk])[0, 0], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_chunk), np.asarray(l_one),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_prefill_chunk_requires_allocated_blocks():
+    m, params = _f32_model()
+    cache = m.init_paged_cache(2, block_size=8, n_blocks=4,
+                               max_blocks_per_seq=4)
+    with pytest.raises(ValueError, match="page table"):
+        m.prefill_chunk(params, jnp.zeros((4,), jnp.int32), cache, 0, 0)
+
+
+def test_flash_prefill_kernel_q_offset_matches_oracle():
+    """The Pallas kernel's chunked form (S_k > S_q, shifted diagonal)
+    matches the jnp oracle's q_offset path."""
+    from repro.kernels import ops
+    from repro.models.layers import AttnConfig, attention_scores_blockwise
+    b, sq, sk, h, kvh, d = 1, 128, 384, 4, 2, 64
+    off = sk - sq
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (b, sq, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kvh, d))
+    want = attention_scores_blockwise(
+        q * d ** -0.5, k, v, AttnConfig(h, kvh, d, q_chunk=64), q_offset=off)
+    out = ops.flash_prefill(q, k, v, causal=True, q_offset=off,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine: chunked admission interleaves with decode (step-plan inspection)
+# ---------------------------------------------------------------------------
+
+
+def _engine(m, params, **kw):
+    from repro.serving.engine import Engine
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return Engine(m, params, **kw)
+
+
+def test_long_prompt_chunks_interleave_with_decode():
+    m, params = _f32_model()
+    rng = np.random.default_rng(3)
+    short = rng.integers(4, 500, size=5).astype(np.int32)
+    long = rng.integers(4, 500, size=30).astype(np.int32)
+
+    eng = _engine(m, params, prefill_chunk_tokens=8)
+    u_short = eng.submit(short, max_new_tokens=10, temperature=0.0)
+    u_long = eng.submit(long, max_new_tokens=5, temperature=0.0)
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [u_short, u_long]
+    assert all(r.error is None for r in done)
+
+    long_chunks = [(u, s, e) for plan in eng.plan_log
+                   for (u, s, e) in plan["prefills"] if u == u_long]
+    assert len(long_chunks) >= 2, "30-token prompt must take >= 2 chunks"
+    assert [s for (_, s, _) in long_chunks] == \
+        sorted(s for (_, s, _) in long_chunks)
+    assert long_chunks[-1][2] == 30
+    # the tentpole property: some step carries a prompt chunk AND decodes
+    mixed = [p for p in eng.plan_log if p["prefills"] and p["decodes"]]
+    assert mixed, "chunked prefill must interleave with running decodes"
+    assert any(u_short in p["decodes"] for p in mixed)
+
+    # chunking must not change greedy outputs vs unchunked admission
+    eng2 = _engine(m, params, prefill_chunk_tokens=512)
+    eng2.submit(short, max_new_tokens=10, temperature=0.0)
+    eng2.submit(long, max_new_tokens=5, temperature=0.0)
+    done2 = eng2.run()
+    assert [r.output for r in sorted(done, key=lambda r: r.uid)] == \
+        [r.output for r in sorted(done2, key=lambda r: r.uid)]
+
+
+# ---------------------------------------------------------------------------
+# engine: preemption on an oversubscribed pool
+# ---------------------------------------------------------------------------
+
+
+def test_oversubscribed_pool_preempts_and_completes():
+    """With n_pages far below the two sequences' peak demand, mid-decode
+    growth preempts (never raises OutOfBlocks) and every request still
+    finishes with outputs identical to an uncontended run."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(4, 500, size=12).astype(np.int32)
+               for _ in range(2)]
+
+    def serve(n_pages):
+        eng = _engine(m, params, n_pages=n_pages)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=20, temperature=0.0)
+        done = sorted(eng.run(), key=lambda r: r.uid)
+        assert all(r.error is None for r in done)
+        return [r.output for r in done], eng
+
+    # peak demand: 2 x ceil(31 / 8) = 8 blocks; give the pool 6
+    contended, eng = serve(n_pages=6)
+    assert eng.metrics["preemptions"] > 0
+    assert all(len(o) == 20 for o in contended)
+    uncontended, eng2 = serve(n_pages=None)
+    assert eng2.metrics["preemptions"] == 0
+    assert contended == uncontended
+    assert eng.cache_utilization() == 0.0
+
+
+def test_preempted_mid_decode_resumes_without_resampling():
+    """The resume prefill covers prompt + output[:-1] and must not emit a
+    duplicate token: output lengths stay exactly max_new_tokens."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(4, 500, size=9).astype(np.int32)
+               for _ in range(3)]
+    eng = _engine(m, params, n_pages=5)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=12, temperature=0.0)
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert eng.metrics["preemptions"] > 0
+    assert [len(r.output) for r in done] == [12, 12, 12]
+    preempted_uids = {u for plan in eng.plan_log for u in plan["preempted"]}
+    resumed_chunks = [(u, s, e) for plan in eng.plan_log
+                      for (u, s, e) in plan["prefills"]
+                      if u in preempted_uids and s == 0]
+    # every preempted sequence recomputes from position 0 (its original
+    # admission chunk plus >= 1 resume chunk)
+    assert len(resumed_chunks) >= 2 * len(preempted_uids)
+
+
+# ---------------------------------------------------------------------------
+# admission clamping + no-spin (seed-engine bug fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_max_new_tokens_ge_max_seq_rejected_with_error():
+    """Seed bug: prompt[-max_seq + max_new:] flipped into a positive
+    slice keeping almost nothing; now it is an explicit rejection."""
+    m, params = _f32_model()
+    eng = _engine(m, params, max_seq=16)
+    rng = np.random.default_rng(6)
+    eng.submit(rng.integers(4, 500, size=8).astype(np.int32),
+               max_new_tokens=16, temperature=0.0)
+    done = eng.run()
+    assert len(done) == 1 and done[0].error is not None
+    assert "max_new_tokens" in done[0].error
+    assert done[0].output == []
+
+
+def test_long_prompt_clamped_to_window_and_completes():
+    m, params = _f32_model()
+    eng = _engine(m, params, max_seq=16)
+    rng = np.random.default_rng(7)
+    eng.submit(rng.integers(4, 500, size=40).astype(np.int32),
+               max_new_tokens=6, temperature=0.0)
+    done = eng.run()
+    assert done[0].error is None and len(done[0].output) == 6
+
+
+def test_empty_prompt_rejected():
+    m, params = _f32_model()
+    eng = _engine(m, params)
+    eng.submit(np.zeros((0,), np.int32), max_new_tokens=4)
+    done = eng.run()
+    assert done[0].error == "empty prompt"
+
+
+def test_never_fits_prompt_rejected_without_spinning():
+    """Seed bug: a deferred head with idle slots spun for max_steps; the
+    scheduler now rejects never-fits work immediately."""
+    m, params = _f32_model()
+    eng = _engine(m, params, n_pages=1)
+    rng = np.random.default_rng(8)
+    eng.submit(rng.integers(4, 500, size=20).astype(np.int32),
+               max_new_tokens=4, temperature=0.0)
+    done = eng.run(max_steps=50)
+    assert len(done) == 1 and "blocks" in done[0].error
+    assert len(eng.plan_log) <= 2, "rejection must not burn idle steps"
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit tests (no model)
+# ---------------------------------------------------------------------------
+
+
+def _pager(n_blocks, bs=4, slots=3, mb=16):
+    return BlockAllocator(PagedConfig(
+        n_layers=1, n_kv_heads=1, head_dim=8, block_size=bs,
+        n_blocks=n_blocks, max_slots=slots, max_blocks_per_seq=mb))
+
+
+def _req(uid, plen, max_new=8):
+    from repro.serving.engine import Request
+    return Request(uid=uid, prompt=np.arange(plen, dtype=np.int32),
+                   max_new_tokens=max_new, output=[])
+
+
+def test_budget_splits_admission_into_chunks():
+    sched = Scheduler(1, 64, _pager(16), prefill_chunk_tokens=4)
+    sched.add(_req(1, 10))
+    spans = []
+    for _ in range(3):
+        plan = sched.schedule()
+        spans += [(c.start, c.end) for c in plan.prefills]
+        assert not plan.decodes or spans[-1][1] == 10
+    assert spans == [(0, 4), (4, 8), (8, 10)]
+    assert sched.schedule().decodes == [0]
+
+
+def test_admission_defers_while_pool_exhausted():
+    pager = _pager(4, bs=4, slots=2)
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64)
+    sched.add(_req(1, 12, max_new=2))          # 3 blocks now, 4 at peak
+    plan = sched.schedule()
+    assert [(c.start, c.end) for c in plan.prefills] == [(0, 12)]
+    sched.running[0].req.output.append(5)
+    sched.add(_req(2, 8))
+    plan = sched.schedule()                    # uid1 growth takes the last
+    assert plan.decodes == [0]                 # block; uid2 must defer,
+    assert not plan.prefills                   # not preempt a decode
+    assert sched.waiting[0].req.uid == 2
+
+
+def test_decode_growth_preempts_newest_victim():
+    pager = _pager(4, bs=4, slots=2)
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64)
+    sched.add(_req(1, 8))
+    sched.add(_req(2, 8))
+    plan = sched.schedule()                    # both admitted: 4/4 blocks
+    assert len(plan.prefills) == 2 and pager.n_free() == 0
+    sched.running[0].req.output.append(5)      # engine would have sampled
+    sched.running[1].req.output.append(7)
+    plan = sched.schedule()
+    assert plan.preempted == [2], "newest-admitted sequence is the victim"
+    assert plan.decodes == [0]
+    # the victim is requeued at the waiting front and — with a block just
+    # freed — immediately begins recompute-on-resume from position 0
+    resumed = [c for c in plan.prefills if c.seq.req.uid == 2]
+    assert resumed and resumed[0].start == 0
+    assert resumed[0].seq.resuming             # keeps its sampled token
+
+
+def test_deadlock_guard_preempts_newest_mid_prefill():
+    """Two mid-prefill sequences splitting an exhausted pool (no decodes
+    possible) must not produce an idle plan: the newest is evicted so the
+    older prefill can proceed."""
+    pager = _pager(2, bs=4, slots=2)
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=8)
+    a = Sequence(req=_req(1, 8), prompt=np.arange(8, dtype=np.int32),
+                 tokens=np.arange(8, dtype=np.int32), slot=0, prefilled=4,
+                 kv_len=4, order=0)
+    b = Sequence(req=_req(2, 8), prompt=np.arange(8, dtype=np.int32),
+                 tokens=np.arange(8, dtype=np.int32), slot=1, prefilled=4,
+                 kv_len=4, order=1)
+    pager.ensure(0, 4)
+    pager.ensure(1, 4)
+    sched.running = {0: a, 1: b}
+    sched._order = 2
+    plan = sched.schedule()
+    assert plan.preempted == [2] and plan.made_progress()
+    plan = sched.schedule()                    # freed block: a continues
+    assert [(c.start, c.end) for c in plan.prefills] == [(4, 8)]
+
+
+def test_growth_beyond_whole_pool_fails_with_error():
+    pager = _pager(2, bs=4, slots=1)
+    sched = Scheduler(1, 64, pager, prefill_chunk_tokens=64)
+    sched.add(_req(1, 8, max_new=16))          # 8 + growth > 8-token pool
+    plan = sched.schedule()
+    assert [(c.start, c.end) for c in plan.prefills] == [(0, 8)]
+    sched.running[0].req.output.append(3)
+    plan = sched.schedule()
+    assert plan.rejected and "pool" in plan.rejected[0].error
+    assert not sched.has_work() and pager.n_free() == 2
+
+
+def test_can_allocate_matches_ensure():
+    pager = _pager(2, bs=4, slots=2)
+    assert pager.can_allocate(0, 8)
+    pager.ensure(0, 8)
+    assert pager.can_allocate(0, 8)            # already covered
+    assert not pager.can_allocate(1, 4)
+    pager.release(0)
+    assert pager.can_allocate(1, 8)
