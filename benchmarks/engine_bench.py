@@ -1,11 +1,18 @@
-"""Engine-level serving benchmark: mixed traffic on an oversubscribed pool.
+"""Engine-level serving benchmark: mixed traffic on an oversubscribed
+pool + a shared-prefix workload over the prefix cache.
 
-Where kernels_bench tracks single-kernel decode costs, this scenario
-exercises the scheduler subsystem end to end: short and long prompts
-submitted together against a paged pool sized at 3/8 of the full
-reservation, with a chunk budget far below the longest prompt — so the
-run necessarily exhibits chunked prefill interleaved with decodes, block
-recycling, and mid-decode preemption with recompute-on-resume.
+Where kernels_bench tracks single-kernel decode costs, these scenarios
+exercise the scheduler subsystem end to end:
+
+  * **mixed** — short and long prompts submitted together against a
+    paged pool sized at 3/8 of the full reservation, with a chunk budget
+    far below the longest prompt: chunked prefill interleaved with
+    decodes, block recycling, mid-decode preemption with
+    recompute-on-resume,
+  * **shared_prefix** — N requests over M distinct system prompts served
+    twice, prefix caching on vs off: reports the hit rate, prefill
+    tokens/blocks saved, and the TTFT deltas the cache buys (CI fails if
+    the hit rate silently drops to zero — see ci/run_ci.sh).
 
 Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
 artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
@@ -14,8 +21,9 @@ metrics is chartable across PRs:
   * TTFT p50/p99 (ms) — chunked admission exists to keep the p99 of
     short requests bounded while long prompts stream in,
   * decode throughput (tok/s over decode wall-clock),
-  * preemption / prefill-chunk / decode-step counts and pool size —
-    the work the scheduler did to absorb the oversubscription.
+  * preemption / prefill-chunk / batched-call / decode-step counts and
+    pool size — the work the scheduler did to absorb the load,
+  * prefix-cache hit rate, cached tokens, and prefill-tokens saved.
 
 CPU wall-clock here is a smoke-level signal (the kernels are jnp paths,
 not the TPU build); the counts are the stable part of the trajectory.
@@ -29,18 +37,113 @@ import numpy as np
 
 PROMPT_LENS = (8, 72, 12, 64, 10, 80, 9, 48, 16, 96)
 
+# shared-prefix workload: N requests drawing on M distinct system prompts
+SP_SYSTEM_PROMPTS = 3
+SP_REQUESTS = 12
+SP_SYSTEM_LEN = 48           # 3 full blocks of 16 -> cacheable prefix
+SP_SUFFIX_LEN = 8
 
-def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
-        max_new_tokens: int = 16) -> dict:
+
+def _build_model():
     import jax
 
     from repro.configs import get_config, reduced
     from repro.models import build_model
-    from repro.serving.engine import Engine
 
     cfg = reduced(get_config("llama2-110m"))
     model = build_model(cfg)
     params = model.quantize(model.init(jax.random.PRNGKey(0)))
+    return model, params
+
+
+def run_shared_prefix(model, params, quiet: bool = False,
+                      max_new_tokens: int = 8) -> dict:
+    """Serve SP_REQUESTS requests over SP_SYSTEM_PROMPTS shared system
+    prompts twice — prefix caching on, then off — and report what the
+    cache bought: hit rate, prefill tokens/blocks saved, TTFT deltas."""
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(1)
+    systems = [rng.integers(4, 500, size=SP_SYSTEM_LEN).astype(np.int32)
+               for _ in range(SP_SYSTEM_PROMPTS)]
+    prompts = [np.concatenate([
+        systems[i % SP_SYSTEM_PROMPTS],
+        rng.integers(4, 500, size=SP_SUFFIX_LEN).astype(np.int32)])
+        for i in range(SP_REQUESTS)]
+
+    def serve(prefix_caching: bool):
+        eng = Engine(model, params, max_slots=4, max_seq=128,
+                     page_size=16, prefill_chunk_tokens=64,
+                     prefix_caching=prefix_caching)
+        # warmup passes populate the prefix index (pass 1) and compile
+        # the warm-path chunk shapes (pass 2, whose plan sequence the
+        # measured pass repeats); the measured pass then shows skipped
+        # prefill compute rather than skipped compilation.
+        for _ in range(2):
+            for p in prompts:
+                eng.submit(p, max_new_tokens=max_new_tokens,
+                           temperature=0.0)
+            assert all(r.error is None for r in eng.run())
+        stats0 = dict(eng.scheduler.prefix_stats)
+        blocks0 = eng.pager.stats["hit_blocks"]
+        plans0 = len(eng.plan_log)
+        uids = [eng.submit(p, max_new_tokens=max_new_tokens,
+                           temperature=0.0) for p in prompts]
+        done = {r.uid: r for r in eng.run()}
+        assert all(done[u].error is None for u in uids)
+        ttft = np.array([done[u].t_first_token - done[u].t_enqueue
+                         for u in uids]) * 1e3
+        dstats = {k: eng.scheduler.prefix_stats[k] - stats0[k]
+                  for k in stats0}
+        dstats["hit_blocks"] = eng.pager.stats["hit_blocks"] - blocks0
+        prefill_tokens = sum(e - s for plan in eng.plan_log[plans0:]
+                             for (_, s, e) in plan["prefills"])
+        return eng, ttft, dstats, prefill_tokens
+
+    warm, ttft_warm, wstats, wtokens = serve(True)
+    cold, ttft_cold, _, ctokens = serve(False)
+
+    result = {
+        "requests": SP_REQUESTS,
+        "distinct_system_prompts": SP_SYSTEM_PROMPTS,
+        "system_len": SP_SYSTEM_LEN,
+        "suffix_len": SP_SUFFIX_LEN,
+        "prefix_hit_rate": wstats["hits"] / max(1, wstats["admissions"]),
+        "prefix_hits": wstats["hits"],
+        "admissions": wstats["admissions"],
+        "cached_tokens": wstats["cached_tokens"],
+        "blocks_saved": wstats["hit_blocks"],
+        "prefill_tokens_warm": wtokens,
+        "prefill_tokens_cold": ctokens,
+        "prompt_tokens_submitted": int(sum(len(p) for p in prompts)),
+        "chunk_batch_calls_warm": warm.metrics["chunk_batch_calls"],
+        "prefill_chunks_warm": warm.metrics["prefill_chunks"],
+        "ttft_ms_p50_warm": float(np.percentile(ttft_warm, 50)),
+        "ttft_ms_p50_cold": float(np.percentile(ttft_cold, 50)),
+        "ttft_ms_p99_warm": float(np.percentile(ttft_warm, 99)),
+        "ttft_ms_p99_cold": float(np.percentile(ttft_cold, 99)),
+    }
+    if not quiet:
+        print(f"enginebench/prefix_hit_rate,"
+              f"{result['prefix_hit_rate']:.2f},ratio"
+              f" ({result['prefix_hits']}/{result['admissions']} admissions,"
+              f" {result['cached_tokens']} tokens,"
+              f" {result['blocks_saved']} blocks reused)")
+        print(f"enginebench/prefill_tokens_saved,"
+              f"{result['prefill_tokens_cold'] - result['prefill_tokens_warm']},"
+              f"tokens (warm {result['prefill_tokens_warm']}"
+              f" vs cold {result['prefill_tokens_cold']})")
+        print(f"enginebench/ttft_ms_p50_warm,"
+              f"{result['ttft_ms_p50_warm']:.1f},ms"
+              f" (cold {result['ttft_ms_p50_cold']:.1f})")
+    return result
+
+
+def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
+        max_new_tokens: int = 16) -> dict:
+    from repro.serving.engine import Engine
+
+    model, params = _build_model()
     rng = np.random.default_rng(0)
 
     max_slots, max_seq, page_size = 4, 128, 16
@@ -73,8 +176,10 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         "tokens_out": eng.metrics["tokens_out"],
         "decode_steps": eng.metrics["decode_steps"],
         "prefill_chunks": eng.metrics["prefill_chunks"],
+        "chunk_batch_calls": eng.metrics["chunk_batch_calls"],
         "preemptions": eng.metrics["preemptions"],
     }
+    result["shared_prefix"] = run_shared_prefix(model, params, quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:
@@ -83,7 +188,8 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         print(f"enginebench/decode_tok_s,{result['decode_tok_s']:.1f},tok/s")
         print(f"enginebench/preemptions,{result['preemptions']},count"
               f" (pool {n_pages}/{full_reservation} blocks,"
-              f" {result['prefill_chunks']} chunks)")
+              f" {result['prefill_chunks']} chunks in"
+              f" {result['chunk_batch_calls']} batched calls)")
     return result
 
 

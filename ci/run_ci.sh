@@ -13,6 +13,7 @@ mkdir -p "$ARTIFACTS_DIR"
 python -m pytest -q -x
 
 python - <<'EOF'
+import json
 import os
 import sys
 sys.path.insert(0, ".")
@@ -21,4 +22,28 @@ art = os.environ.get("ARTIFACTS_DIR", "artifacts")
 kernels_bench.run()
 kernels_bench.run_decode(json_path=os.path.join(art, "BENCH_decode.json"))
 engine_bench.run(json_path=os.path.join(art, "BENCH_engine.json"))
+
+# Regression tripwire: the shared-prefix workload must actually hit the
+# prefix cache — a zero hit rate means caching got silently disabled or
+# the index broke, which no functional test would notice as a failure.
+with open(os.path.join(art, "BENCH_engine.json")) as fh:
+    bench = json.load(fh)
+sp = bench["shared_prefix"]
+print("CI engine-bench summary:")
+print(f"  prefix_hit_rate={sp['prefix_hit_rate']:.2f} "
+      f"({sp['prefix_hits']}/{sp['admissions']} admissions)")
+print(f"  cached_tokens={sp['cached_tokens']} "
+      f"blocks_saved={sp['blocks_saved']}")
+print(f"  prefill_tokens warm={sp['prefill_tokens_warm']} "
+      f"cold={sp['prefill_tokens_cold']}")
+print(f"  ttft_ms_p50 warm={sp['ttft_ms_p50_warm']:.1f} "
+      f"cold={sp['ttft_ms_p50_cold']:.1f}")
+print(f"  mixed: preemptions={bench['preemptions']} "
+      f"prefill_chunks={bench['prefill_chunks']} "
+      f"in {bench['chunk_batch_calls']} batched calls")
+if sp["prefix_hit_rate"] <= 0 or sp["cached_tokens"] <= 0:
+    sys.exit("FAIL: shared-prefix workload reports a zero prefix-cache "
+             "hit rate — prefix caching is silently broken or disabled")
+if sp["prefill_tokens_warm"] >= sp["prefill_tokens_cold"]:
+    sys.exit("FAIL: prefix caching did not reduce executed prefill tokens")
 EOF

@@ -34,6 +34,10 @@ class Model:
     # -> (last-position logits, updated cache).  None when paging is
     # unsupported.
     prefill_chunk: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    # batched chunk execution: prefill_chunk_batch(params, tokens (B, c),
+    # cache, slots, pos_offset) -> ((B, V) logits, cache) — one device
+    # call for same-shape chunks across B distinct slots.
+    prefill_chunk_batch: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
 
     def quantize(self, params, policy: Optional[QuantPolicy] = None,
                  fuse_decode: bool = True):
@@ -59,11 +63,14 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, c, t, **kw),
             init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
         )
-    paged = chunk = None
+    paged = chunk = chunk_batch = None
     if transformer.supports_paged_cache(cfg):
         paged = lambda bsz, **kw: transformer.init_paged_cache(cfg, bsz, **kw)
         chunk = lambda p, t, c, slot, off: transformer.prefill_chunk(
             p, cfg, t, c, slot, off)
+        chunk_batch = lambda p, t, c, slots, off, page_table=None: \
+            transformer.prefill_chunk_batch(p, cfg, t, c, slots, off,
+                                            page_table=page_table)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -74,6 +81,7 @@ def build_model(cfg: ModelConfig) -> Model:
         init_cache=lambda bsz, seq: transformer.init_cache(cfg, bsz, seq),
         init_paged_cache=paged,
         prefill_chunk=chunk,
+        prefill_chunk_batch=chunk_batch,
     )
 
 

@@ -876,35 +876,72 @@ def prefill_chunk(params: Params, cfg: ModelConfig, tokens_chunk: jax.Array,
     chunk's last-position logits ``(1, V)`` and the updated cache with
     ``lens[slot] = pos_offset + c``.
 
-    The traced body is jitted with the cache **donated** so each chunk
-    updates the pool in place instead of copying it (the hot property of
-    the admission scatter this replaces); it recompiles per distinct
-    ``(chunk_len, pos_offset)`` pair, which the fixed
-    ``prefill_chunk_tokens`` budget keeps bounded per prompt length.
+    This is the single-sequence view of :func:`prefill_chunk_batch`
+    (B = 1); see there for the jit/donation story.
+    """
+    toks = jnp.asarray(tokens_chunk, jnp.int32).reshape(1, -1)
+    return prefill_chunk_batch(params, cfg, toks, cache, [slot], pos_offset)
+
+
+def prefill_chunk_batch(params: Params, cfg: ModelConfig,
+                        tokens_chunks: jax.Array, cache: Cache,
+                        slots, pos_offset: int,
+                        page_table=None) -> Tuple[jax.Array, Cache]:
+    """Prefill one same-shape prompt chunk for B sequences in ONE device
+    call (the batched-chunk-execution path: the engine groups chunks that
+    share ``(chunk_len, pos_offset)`` across slots instead of launching
+    ``prefill_chunk`` once per sequence).
+
+    ``tokens_chunks`` is ``(B, c)``; ``slots`` lists B *distinct* slot
+    ids; every row starts at the same global ``pos_offset`` (so rope and
+    the causal-mask ``q_offset`` are shared) but reads its own prefix
+    blocks and writes its own chunk blocks through its page-table row —
+    per-row ``(B, c)`` block coordinates and ``(B, n_pfx)`` prefix ids
+    are resolved host-side, so the scatter/gather stays static advanced
+    indexing.  Returns per-row last-position logits ``(B, V)`` and the
+    updated cache with ``lens[slots] = pos_offset + c``.
+
+    The traced body is jitted with the cache **donated** so each call
+    updates the pool in place instead of copying it; it recompiles per
+    distinct ``(B, chunk_len, pos_offset)`` triple — the slot ids ride
+    along as traced data, so serving the same chunk shape from a
+    different slot reuses the compile.
+
+    ``page_table`` may carry the caller's host-side copy of
+    ``cache["page_table"]`` (the engine publishes both from the same
+    allocator state) to spare a device readback per call.
     """
     if "page_table" not in cache:
         raise ValueError("prefill_chunk requires a paged cache "
                          "(init_paged_cache)")
-    toks = jnp.asarray(tokens_chunk, jnp.int32).reshape(1, -1)
-    c = toks.shape[1]
+    toks = jnp.asarray(tokens_chunks, jnp.int32)
+    b, c = toks.shape
+    if len(set(slots)) != b:
+        raise ValueError(f"slots {slots} must be {b} distinct ids")
     bs = cache["attn"]["k"].shape[2]
 
-    # Host-side (concrete) addressing: this call's rows live at fixed
-    # (block, offset) coordinates, so the scatter/gather lowers to static
-    # advanced indexing instead of a dynamic per-token loop.
-    pt_row = np.asarray(cache["page_table"][slot])
+    # Host-side (concrete) addressing: each row's chunk lives at fixed
+    # (block, offset) coordinates in its own leased blocks.
+    pt = np.asarray(cache["page_table"] if page_table is None
+                    else page_table)
     gpos = np.arange(pos_offset, pos_offset + c)
-    if np.any(pt_row[gpos // bs] < 0):
-        raise ValueError(f"slot {slot} page table does not cover rows "
-                         f"[{pos_offset}, {pos_offset + c}) — allocate "
-                         "blocks before prefill_chunk")
-    chunk_blk = jnp.asarray(pt_row[gpos // bs], jnp.int32)      # (c,)
-    chunk_off = jnp.asarray(gpos % bs, jnp.int32)
     n_pfx = -(-pos_offset // bs)
-    pfx_ids = jnp.asarray(pt_row[:n_pfx], jnp.int32)
+    chunk_blk = np.empty((b, c), np.int32)
+    pfx_ids = np.empty((b, n_pfx), np.int32)
+    for i, slot in enumerate(slots):
+        row = pt[slot]
+        if np.any(row[gpos // bs] < 0):
+            raise ValueError(f"slot {slot} page table does not cover rows "
+                             f"[{pos_offset}, {pos_offset + c}) — allocate "
+                             "blocks before prefill_chunk")
+        chunk_blk[i] = row[gpos // bs]
+        pfx_ids[i] = row[:n_pfx]
+    chunk_off = jnp.asarray(gpos % bs, jnp.int32)               # (c,)
 
-    return _prefill_chunk_fn(cfg)(params, cache, toks, chunk_blk,
-                                  chunk_off, pfx_ids, slot=slot,
+    return _prefill_chunk_fn(cfg)(params, cache, toks,
+                                  jnp.asarray(chunk_blk), chunk_off,
+                                  jnp.asarray(pfx_ids),
+                                  jnp.asarray(np.asarray(slots, np.int32)),
                                   pos_offset=pos_offset)
 
 
@@ -917,18 +954,19 @@ def _prefill_chunk_fn(cfg: ModelConfig):
     acfg = L.AttnConfig(cfg.n_heads, kvh, hd, causal=True,
                         q_chunk=cfg.q_chunk)
 
-    @functools.partial(jax.jit, static_argnames=("slot", "pos_offset"),
+    @functools.partial(jax.jit, static_argnames=("pos_offset",),
                        donate_argnums=(1,))
-    def run(params, cache, toks, chunk_blk, chunk_off, pfx_ids, *,
-            slot: int, pos_offset: int):
-        c = toks.shape[1]
+    def run(params, cache, toks, chunk_blk, chunk_off, pfx_ids, slots, *,
+            pos_offset: int):
+        b, c = toks.shape
         bs = cache["attn"]["k"].shape[2]
-        n_pfx = pfx_ids.shape[0]
+        n_pfx = pfx_ids.shape[1]
 
-        positions = jnp.arange(pos_offset, pos_offset + c,
-                               dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(
+            jnp.arange(pos_offset, pos_offset + c, dtype=jnp.int32)[None],
+            (b, c))
         if cfg.rope_type == "mrope":
-            positions = jnp.broadcast_to(positions, (3, 1, c))
+            positions = jnp.broadcast_to(positions, (3, b, c))
         rope_cs = _rope_cos_sin(cfg, positions)
         x = embed_inputs(params, cfg, {"tokens": toks})
 
@@ -943,13 +981,15 @@ def _prefill_chunk_fn(cfg: ModelConfig):
                 q = L.apply_rope(q, cos[:, :, None], sin[:, :, None])
                 k = L.apply_rope(k, cos[:, :, None], sin[:, :, None])
             if pos_offset:
-                kp = lc["k"][pfx_ids].reshape(1, n_pfx * bs, kvh, hd)
-                vp = lc["v"][pfx_ids].reshape(1, n_pfx * bs, kvh, hd)
+                # each row gathers ITS prefix blocks (shared blocks may
+                # appear in several rows — reads never conflict)
+                kp = lc["k"][pfx_ids].reshape(b, n_pfx * bs, kvh, hd)
+                vp = lc["v"][pfx_ids].reshape(b, n_pfx * bs, kvh, hd)
                 if int8:
                     kp = kp.astype(jnp.float32) * lc["ks"][pfx_ids].reshape(
-                        1, n_pfx * bs, kvh)[..., None]
+                        b, n_pfx * bs, kvh)[..., None]
                     vp = vp.astype(jnp.float32) * lc["vs"][pfx_ids].reshape(
-                        1, n_pfx * bs, kvh)[..., None]
+                        b, n_pfx * bs, kvh)[..., None]
                 k_all = jnp.concatenate(
                     [kp[:, :pos_offset].astype(k.dtype), k], axis=1)
                 v_all = jnp.concatenate(
@@ -965,17 +1005,17 @@ def _prefill_chunk_fn(cfg: ModelConfig):
 
             lc = dict(lc)
             if int8:
-                kq_, ks_ = _quantize_kv(k[0])
-                vq_, vs_ = _quantize_kv(v[0])
+                kq_, ks_ = _quantize_kv(k)
+                vq_, vs_ = _quantize_kv(v)
                 lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(kq_)
                 lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(vq_)
                 lc["ks"] = lc["ks"].at[chunk_blk, chunk_off].set(ks_)
                 lc["vs"] = lc["vs"].at[chunk_blk, chunk_off].set(vs_)
             else:
                 lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(
-                    k[0].astype(lc["k"].dtype))
+                    k.astype(lc["k"].dtype))
                 lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(
-                    v[0].astype(lc["v"].dtype))
+                    v.astype(lc["v"].dtype))
             return h, lc
 
         x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
@@ -983,7 +1023,7 @@ def _prefill_chunk_fn(cfg: ModelConfig):
         logits = L.lm_head(_head_weight(params, cfg), x[:, -1])
         new_cache = dict(cache)
         new_cache["attn"] = new_attn
-        new_cache["lens"] = cache["lens"].at[slot].set(pos_offset + c)
+        new_cache["lens"] = cache["lens"].at[slots].set(pos_offset + c)
         return logits, new_cache
 
     return run

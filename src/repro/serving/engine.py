@@ -19,14 +19,24 @@ future work.  This engine is that future work, split into two layers:
 
 KV memory is **paged** by default (vLLM-style, serving/paged_cache.py):
 the device cache is a pool of ``page_size``-token blocks shared by every
-slot through a page table; the scheduler hands blocks to sequences as
-their lengths grow and takes them back on finish *or preemption*, so an
-oversubscribed pool (``n_pages`` below the full reservation) degrades to
-eviction + recompute instead of raising ``OutOfBlocks``.  Families whose
-cache is not a single attention bank (ssm / hybrid / audio /
-interleaved-moe) fall back to the dense per-slot reservation, where
-prompts are admitted as one whole-prompt chunk and preemption never
-triggers.
+slot through a page table; the scheduler *leases* blocks to sequences as
+their lengths grow (refcounted — a block may back several slots) and
+drops the leases on finish *or preemption*, so an oversubscribed pool
+(``n_pages`` below the full reservation) degrades to eviction + recompute
+instead of raising ``OutOfBlocks``.  On top of the leases sits **automatic
+prefix caching**: after executing a chunk or decode the engine registers
+every freshly-filled full block into the allocator's hash-chained prefix
+index (token-content addressed), admission maps a request's longest
+cached prefix read-only into its page table, and the plan's chunks start
+past it — the shared prefix runs zero prefill tokens and, because decode
+attention already reads through the page table, needs no kernel changes.
+The engine also executes the plan's copy-on-write pairs (device block
+copies) before any write into a previously-shared block, and groups
+same-shape prefill chunks from different slots into ONE batched
+``prefill_chunk_batch`` device call per step.  Families whose cache is
+not a single attention bank (ssm / hybrid / audio / interleaved-moe)
+fall back to the dense per-slot reservation, where prompts are admitted
+as one whole-prompt chunk and preemption/caching never trigger.
 
 Sampling matches the paper's evaluation setup: temperature 1.0, top-p 1.0
 (A.1) — but each request's ``temperature``/``top_p`` are honored, threaded
@@ -34,15 +44,19 @@ through one vectorized sampler call per step (no per-slot Python loops).
 
 Knobs: ``prefill_chunk_tokens`` bounds prompt work per step (the
 prefill/decode interleaving grain); ``page_size``/``n_pages`` size the
-pool.  ``Engine.plan_log`` keeps the executed step plans (uids, chunk
-ranges, preemptions) for inspection — tests assert chunk/decode
-interleaving on it, and benchmarks/engine_bench.py reports preemption
-counts from it.
+pool; ``prefix_caching`` toggles the block index (on by default);
+``preempt_limit`` is the scheduler's starvation bound.  ``Engine.plan_log``
+keeps the executed step plans (uids, chunk ranges, preemptions, COW
+pairs, cached-prefix admissions) for inspection — tests assert
+chunk/decode interleaving and prefix skips on it, and
+benchmarks/engine_bench.py reports preemption counts and prefix-cache
+hit rates from it.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional
 
@@ -51,7 +65,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.serving.paged_cache import BlockAllocator, PagedConfig
+from repro.serving.paged_cache import (BlockAllocator, PagedConfig,
+                                       chain_hash)
 from repro.serving.scheduler import PrefillChunk, Scheduler
 
 
@@ -97,6 +112,14 @@ def sample_logits(key, logits: jax.Array, temperature=1.0,
     return jnp.where(t <= 0.0, greedy, sampled)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_pool_blocks(attn, src, dst):
+    """Copy whole pool blocks src -> dst across every layer (and scale
+    pools for int8) — the device half of copy-on-write.  Buffers are
+    (L, NB, BS, ...); donation keeps it in place."""
+    return {kk: buf.at[:, dst].set(buf[:, src]) for kk, buf in attn.items()}
+
+
 class Engine:
     """Single-host continuous-batching engine (plan executor).
 
@@ -119,7 +142,8 @@ class Engine:
                  max_seq: int = 1024, eos_id: int = 2, seed: int = 0,
                  cache_kind: str = "paged", page_size: int = 64,
                  n_pages: Optional[int] = None,
-                 prefill_chunk_tokens: int = 512):
+                 prefill_chunk_tokens: int = 512,
+                 prefix_caching: bool = True, preempt_limit: int = 3):
         self.model = model
         self.params = params
         self.max_slots = max_slots
@@ -141,7 +165,8 @@ class Engine:
                 n_layers=model.cfg.n_layers,
                 n_kv_heads=model.cfg.n_kv_heads, head_dim=model.cfg.hd(),
                 block_size=page_size, n_blocks=self.n_pages,
-                max_slots=max_slots, max_blocks_per_seq=mb))
+                max_slots=max_slots, max_blocks_per_seq=mb),
+                enable_prefix_cache=prefix_caching)
             self.cache = model.init_paged_cache(
                 max_slots, block_size=page_size, n_blocks=self.n_pages,
                 max_blocks_per_seq=mb)
@@ -149,11 +174,16 @@ class Engine:
             self.cache = model.init_cache(max_slots, max_seq)
         self.scheduler = Scheduler(
             max_slots=max_slots, max_seq=max_seq, pager=self.pager,
-            prefill_chunk_tokens=prefill_chunk_tokens)
+            prefill_chunk_tokens=prefill_chunk_tokens,
+            preempt_limit=preempt_limit)
         self.plan_log: List[Dict[str, Any]] = []
         self.metrics = {"tokens_out": 0, "requests_done": 0,
                         "decode_steps": 0, "t_decode": 0.0,
-                        "prefill_chunks": 0, "preemptions": 0}
+                        "prefill_chunks": 0, "preemptions": 0,
+                        "chunk_batch_calls": 0, "cow_copies": 0,
+                        "prefix_hits": 0, "prefix_cached_tokens": 0,
+                        "prefix_evictions": 0}
+        self._host_pt: Optional[np.ndarray] = None
         self._uid = 0
 
     # -- public API ---------------------------------------------------------
@@ -188,13 +218,32 @@ class Engine:
                     f"running={len(self.scheduler.running)})")
             self.plan_log.append(plan.summary())
             self.metrics["preemptions"] = self.scheduler.n_preempted
+            self.metrics["prefix_hits"] = \
+                self.scheduler.prefix_stats["hits"]
+            self.metrics["prefix_cached_tokens"] = \
+                self.scheduler.prefix_stats["cached_tokens"]
+            if self.paged:
+                self.metrics["prefix_evictions"] = \
+                    self.pager.stats["evictions"]
             if self.paged and plan.has_work():
-                # one republish per step covers this step's allocations
-                # and any releases (finish/preempt) since the last one.
-                self.cache["page_table"] = jnp.asarray(
-                    self.pager.page_table())
-            for chunk in plan.prefills:
-                self._run_chunk(chunk)
+                # one republish per step covers this step's allocations,
+                # COW remaps, and any releases (finish/preempt) since the
+                # last one; the host copy is kept for chunk addressing so
+                # the batched calls never read the table back off-device.
+                self._host_pt = self.pager.page_table()
+                self.cache["page_table"] = jnp.asarray(self._host_pt)
+            if self.paged and plan.cows:
+                # copy-on-write: duplicate the shared blocks' rows before
+                # this step's writes land in the fresh copies.  (Counted
+                # here, not from allocator stats — a retracted victim's
+                # pair never reaches execution.)
+                src = jnp.asarray([s for s, _ in plan.cows], jnp.int32)
+                dst = jnp.asarray([d for _, d in plan.cows], jnp.int32)
+                self.cache["attn"] = _copy_pool_blocks(
+                    self.cache["attn"], src, dst)
+                self.metrics["cow_copies"] += len(plan.cows)
+            for group in self._chunk_groups(plan.prefills):
+                self._run_chunks(group)
             if plan.decodes:
                 done.extend(self._decode_once(plan.decodes))
         return done
@@ -210,19 +259,48 @@ class Engine:
         return self.metrics["tokens_out"] / t if t > 0 else 0.0
 
     # -- internals ------------------------------------------------------
-    def _run_chunk(self, chunk: PrefillChunk) -> None:
-        """Execute one planned prompt chunk (paged: straight into the
-        pool; dense: whole-prompt prefill merged into the slot)."""
-        seq, req = chunk.seq, chunk.seq.req
-        toks = jnp.asarray(seq.tokens[chunk.start:chunk.end], jnp.int32)
+    def _chunk_groups(self, prefills: List[PrefillChunk]
+                      ) -> List[List[PrefillChunk]]:
+        """Group this step's chunks by (chunk_len, pos_offset) — each
+        group becomes ONE batched device call (slots within a plan are
+        distinct by construction).  Dense fallback: singletons."""
+        if not self.paged:
+            return [[c] for c in prefills]
+        groups: Dict[Any, List[PrefillChunk]] = {}
+        for c in prefills:
+            groups.setdefault((c.end - c.start, c.start), []).append(c)
+        return list(groups.values())
+
+    def _run_chunks(self, chunks: List[PrefillChunk]) -> None:
+        """Execute one group of same-shape planned chunks — paged: one
+        batched ``prefill_chunk_batch`` call writing every row's KV
+        straight into its pool blocks; dense: per-sequence whole-prompt
+        prefill merged into the slot."""
         if self.paged:
-            logits, self.cache = self.model.prefill_chunk(
-                self.params, toks, self.cache, seq.slot, chunk.start)
+            start = chunks[0].start
+            toks = jnp.asarray(np.stack(
+                [c.seq.tokens[c.start:c.end] for c in chunks]))
+            logits, self.cache = self.model.prefill_chunk_batch(
+                self.params, toks, self.cache,
+                [c.seq.slot for c in chunks], start,
+                page_table=self._host_pt)
+            self.metrics["chunk_batch_calls"] += 1
+            for i, c in enumerate(chunks):
+                self._register_blocks(c.seq)
+                self._finish_chunk(c, logits[i:i + 1])
         else:
-            logits, pcache = self.model.prefill(
-                self.params, {"tokens": toks[None, :]},
-                max_seq=self.max_seq)
-            self._merge_slot_cache(seq.slot, pcache, chunk.end)
+            for c in chunks:
+                toks = jnp.asarray(c.seq.tokens[c.start:c.end], jnp.int32)
+                logits, pcache = self.model.prefill(
+                    self.params, {"tokens": toks[None, :]},
+                    max_seq=self.max_seq)
+                self._merge_slot_cache(c.seq.slot, pcache, c.end)
+                self._finish_chunk(c, logits)
+
+    def _finish_chunk(self, chunk: PrefillChunk, logits) -> None:
+        """Per-chunk bookkeeping after the device call: count it and, on
+        the prompt's last chunk, sample the first output token."""
+        seq, req = chunk.seq, chunk.seq.req
         self.metrics["prefill_chunks"] += 1
         if chunk.last:
             if seq.resuming:
@@ -235,6 +313,31 @@ class Engine:
                                       req.top_p)
                 req.output.append(int(first[0]))
                 req.t_first_token = time.perf_counter()
+
+    def _register_blocks(self, seq) -> None:
+        """Publish every freshly-filled FULL block of ``seq`` into the
+        allocator's prefix index (hash chained on the block's whole token
+        prefix).  Rows past ``kv_len`` are untouched garbage, so only
+        blocks completely below it qualify; partial tails stay mutable
+        and unregistered."""
+        if self.pager is None or not self.pager.enable_prefix_cache:
+            return
+        bs = self.page_size
+        full = seq.kv_len // bs
+        if full <= seq.registered:
+            return
+        # token id at pool row i is concat(prompt, output)[i]: prefill
+        # rows hold (possibly resumed) prompt tokens, each decode row
+        # holds the token fed that step — output[-1] at planning time.
+        ids = np.concatenate(
+            [seq.prompt, np.asarray(seq.req.output or [], np.int32)])
+        for j in range(seq.registered, full):
+            parent = seq.block_hashes[j - 1] if j else None
+            block = ids[j * bs:(j + 1) * bs]
+            h = chain_hash(parent, block)
+            seq.block_hashes.append(h)
+            self.pager.register_block(seq.slot, j, h, block)
+        seq.registered = full
 
     def _merge_slot_cache(self, slot: int, pcache: Any, plen: int) -> None:
         """Copy a (1, …) prefill cache into slot ``slot`` of the dense
@@ -288,6 +391,9 @@ class Engine:
             tok = int(nxt[i])
             req.output.append(tok)
             self.metrics["tokens_out"] += 1
+            # the step's KV row is in the pool now; if it completed a
+            # block, publish it (before a finish drops the lease).
+            self._register_blocks(seq)
             if tok == self.eos_id or len(req.output) >= req.max_new_tokens \
                     or seq.kv_len >= self.max_seq - 1:
                 req.t_done = time.perf_counter()

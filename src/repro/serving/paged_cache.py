@@ -1,10 +1,10 @@
-"""Paged KV cache: block allocator + gather-based attention view.
+"""Paged KV cache: refcounted copy-on-write block pool + prefix index.
 
 The fixed-slot engine (engine.py) reserves ``max_seq`` KV rows per slot —
 fine at small scale, but at 32k context × 128 slots the reservation is
 ~100% waste for short requests.  Paged attention (vLLM) fixes this: the
-cache is a pool of fixed-size *blocks*; each sequence owns a block list;
-attention gathers its blocks through a page table.
+cache is a pool of fixed-size *blocks*; each sequence leases a block
+list; attention gathers its blocks through a page table.
 
 Design (jit-friendly — all shapes static):
 
@@ -17,17 +17,41 @@ only sees dense gathers.  Append of one token touches one (layer, block)
 row.  Supports the Q8_0-quantized pool like the contiguous cache
 (``quantized=True`` adds per-(position, kv-head) f32 scale pools).
 
+Ownership model (this is the part every caller must respect):
+
+  * Blocks are **leased, not owned**.  Each block carries a refcount —
+    the number of slot page tables it appears in.  ``ensure`` hands out
+    exclusive (ref 1) writable blocks; ``acquire_cached`` and ``fork``
+    map existing blocks into another slot read-only (ref++).
+  * A **full, immutable** block may be registered in the prefix index
+    under a chain hash ``H_j = hash((H_{j-1}, token_ids[block_j]))`` —
+    content-addressed by the whole token prefix, so a lookup walks the
+    chain and returns the longest cached run of full blocks.  Registered
+    blocks are never written again (appends always land past them).
+  * ``release`` only **decrements** refcounts.  A zero-ref registered
+    block is not freed: it parks on an LRU list, its KV intact, and is
+    reclaimable — ``n_free`` counts it, and allocation evicts the LRU
+    (dropping its index entry) only after the true free list runs dry.
+    Cached blocks are therefore reclaimable, never leaked.
+  * Writing into a **shared** block (ref > 1 — only reachable for the
+    partial tail block mapped by ``fork``) must copy-on-write first:
+    ``copy_on_write`` re-points the writer's page-table entry at a fresh
+    exclusive block and reports the (src, dst) pair so the engine can
+    copy the device rows before the write lands.
+
 The serving engine (engine.py) runs on this layout by default: it owns a
 :class:`BlockAllocator` host-side and a device pool built by
 ``models.transformer.init_paged_cache``; decode attention reads the pool
 through the page table (``kernels/paged_decode_attention.py`` on TPU, the
-gather view below as the jnp oracle).
+gather view below as the jnp oracle) — shared blocks need no kernel
+changes, the page table indirection already handles many-to-one maps.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +62,27 @@ from repro.core.quantization import quantize_rows
 
 class OutOfBlocks(RuntimeError):
     pass
+
+
+def chain_hash(parent: Optional[int], tokens) -> int:
+    """Content hash of one full block given its prefix chain.
+
+    Keyed on (parent hash, token ids) so equal hashes mean equal whole
+    prefixes — a block is only reusable together with everything before
+    it.  Python's tuple hash is stable within a process, which is the
+    allocator's lifetime."""
+    return hash((parent, tuple(int(t) for t in tokens)))
+
+
+def prefix_block_hashes(tokens, block_size: int) -> List[int]:
+    """Chain hashes for every *full* block of ``tokens`` (partial tail
+    excluded — only immutable, completely-filled blocks are cacheable)."""
+    out: List[int] = []
+    h: Optional[int] = None
+    for j in range(len(tokens) // block_size):
+        h = chain_hash(h, tokens[j * block_size:(j + 1) * block_size])
+        out.append(h)
+    return out
 
 
 @dataclasses.dataclass
@@ -54,12 +99,33 @@ class PagedConfig:
 
 
 class BlockAllocator:
-    """Host-side free-list allocator with per-slot block ownership."""
+    """Host-side refcounted allocator with per-slot block *leases*.
 
-    def __init__(self, cfg: PagedConfig):
+    ``owned[slot]`` is the slot's page-table prefix — a list of block ids
+    it leases.  The same id may appear in several slots' lists (shared
+    prefix / fork); ``refcount[id]`` counts those appearances.  Zero-ref
+    blocks live either on ``free`` (content dead) or ``lru`` (registered
+    in the prefix index, content intact, reclaimable in LRU order).
+    """
+
+    def __init__(self, cfg: PagedConfig, enable_prefix_cache: bool = True):
         self.cfg = cfg
+        self.enable_prefix_cache = enable_prefix_cache
         self.free: List[int] = list(range(cfg.n_blocks))[::-1]
         self.owned: List[List[int]] = [[] for _ in range(cfg.max_slots)]
+        self.refcount: List[int] = [0] * cfg.n_blocks
+        # content hash of a registered full block (None = mutable/partial)
+        self.block_hash: List[Optional[int]] = [None] * cfg.n_blocks
+        # registered block's actual token ids — lookup verifies these, so
+        # a chain_hash collision degrades to a miss, never to serving
+        # another prefix's KV
+        self.block_tokens: Dict[int, Tuple[int, ...]] = {}
+        # chain hash -> canonical block id holding that whole prefix
+        self.index: Dict[int, int] = {}
+        # zero-ref registered blocks, least-recently-released first
+        self.lru: "OrderedDict[int, None]" = OrderedDict()
+        self.stats = {"lookups": 0, "hit_blocks": 0, "evictions": 0,
+                      "cow_copies": 0}
 
     def blocks_needed(self, length: int) -> int:
         return -(-length // self.cfg.block_size)
@@ -71,34 +137,210 @@ class BlockAllocator:
         chunk, deferring it, and preempting a victim — without ever
         tripping :class:`OutOfBlocks` on the serving path."""
         need = self.blocks_needed(length) - len(self.owned[slot])
-        return need <= len(self.free)
+        return need <= self.n_free()
 
     def n_free(self) -> int:
-        return len(self.free)
+        """Reclaimable blocks: truly free + zero-ref cached (LRU)."""
+        return len(self.free) + len(self.lru)
+
+    def n_cached(self) -> int:
+        """Zero-ref blocks currently held for prefix reuse."""
+        return len(self.lru)
+
+    def _pop_block(self) -> int:
+        """Take a writable block: free list first, then evict the LRU
+        zero-ref cached block (dropping its prefix-index entry)."""
+        if self.free:
+            return self.free.pop()
+        if self.lru:
+            bid, _ = self.lru.popitem(last=False)
+            h = self.block_hash[bid]
+            if h is not None and self.index.get(h) == bid:
+                del self.index[h]
+            self.block_hash[bid] = None
+            self.block_tokens.pop(bid, None)
+            self.stats["evictions"] += 1
+            return bid
+        raise OutOfBlocks(f"pool exhausted ({self.cfg.n_blocks} blocks)")
 
     def ensure(self, slot: int, length: int) -> List[int]:
-        """Grow slot's block list to cover ``length`` tokens."""
+        """Grow slot's lease list with fresh exclusive blocks to cover
+        ``length`` tokens (cached prefix blocks must already have been
+        mapped via :meth:`acquire_cached`)."""
         need = self.blocks_needed(length)
         cur = self.owned[slot]
         while len(cur) < need:
-            if not self.free:
-                raise OutOfBlocks(
-                    f"pool exhausted ({self.cfg.n_blocks} blocks)")
-            cur.append(self.free.pop())
+            bid = self._pop_block()
+            assert self.refcount[bid] == 0
+            self.refcount[bid] = 1
+            cur.append(bid)
         return cur
 
+    def _deref(self, bid: int) -> None:
+        self.refcount[bid] -= 1
+        assert self.refcount[bid] >= 0, f"double-free of block {bid}"
+        if self.refcount[bid]:
+            return
+        h = self.block_hash[bid]
+        if h is not None and self.index.get(h) == bid:
+            self.lru[bid] = None          # newest end; content stays valid
+        else:
+            self.block_hash[bid] = None
+            self.block_tokens.pop(bid, None)
+            self.free.append(bid)
+
     def release(self, slot: int) -> None:
-        """Return every block owned by ``slot`` to the free list.
+        """Drop every lease ``slot`` holds (finish or preemption).
 
-        Used both when a sequence finishes and when the scheduler preempts
-        it (the request keeps its generated tokens host-side and its KV is
-        recomputed on resume, so no block content needs to survive)."""
-        self.free.extend(reversed(self.owned[slot]))
-        self.owned[slot] = []
+        This only *decrements* refcounts: blocks shared with other slots
+        stay live, and zero-ref registered blocks park on the LRU with
+        their KV intact so a later request (or this one resuming after
+        preemption) can remap them instead of recomputing."""
+        blocks, self.owned[slot] = self.owned[slot], []
+        for bid in reversed(blocks):
+            self._deref(bid)
 
+    # -- prefix cache -----------------------------------------------------
+    def prefix_hashes(self, tokens) -> List[int]:
+        """Chain hashes of ``tokens``' full blocks, counted as ONE lookup.
+
+        The hashes depend only on the tokens, not on allocator state —
+        the scheduler computes them once per sequence and re-walks the
+        index for free on every deferred-admission retry."""
+        self.stats["lookups"] += 1
+        return prefix_block_hashes(tokens, self.cfg.block_size)
+
+    def lookup_prefix(self, tokens, hashes: Optional[List[int]] = None
+                      ) -> Tuple[List[int], List[int]]:
+        """Longest cached run of full blocks matching ``tokens``.
+
+        Returns (block ids, chain hashes), both possibly empty.  Walks the
+        hash chain from the root; the first miss ends the run, so the
+        result is always a contiguous prefix whose every block is either
+        leased (live) or parked on the LRU (content intact) — eviction
+        removes index entries, so presence in the index implies validity.
+        Each hit's stored token ids are compared against the query
+        (``hash()`` is not collision-free); because the walk verifies
+        every block from the root, a match means the whole prefix's
+        tokens are identical, never just hash-equal.  Pass precomputed
+        ``hashes`` (:meth:`prefix_hashes`) to skip re-hashing the prompt
+        on retries."""
+        if not self.enable_prefix_cache:
+            return [], []
+        if hashes is None:
+            hashes = self.prefix_hashes(tokens)
+        bs = self.cfg.block_size
+        bids: List[int] = []
+        out: List[int] = []
+        for j, h in enumerate(hashes):
+            bid = self.index.get(h)
+            if bid is None:
+                break
+            block = tuple(int(t) for t in tokens[j * bs:(j + 1) * bs])
+            if self.block_tokens.get(bid) != block:
+                break
+            bids.append(bid)
+            out.append(h)
+        return bids, out
+
+    def reusable_free_count(self, bids: Sequence[int]) -> int:
+        """``n_free()`` minus the blocks in ``bids`` that are currently
+        zero-ref (i.e. would come off the LRU if acquired) — the headroom
+        left for *new* allocations after mapping that cached prefix."""
+        return self.n_free() - sum(1 for b in set(bids)
+                                   if self.refcount[b] == 0)
+
+    def acquire_cached(self, slot: int, bids: Sequence[int]) -> None:
+        """Map a looked-up cached prefix into ``slot`` read-only (ref++).
+
+        Must be the slot's first mapping (admission) so the blocks form
+        the page-table prefix that positions 0..k*bs-1 read through."""
+        assert not self.owned[slot], "cached prefix must be mapped first"
+        for bid in bids:
+            if self.refcount[bid] == 0:
+                self.lru.pop(bid)
+            self.refcount[bid] += 1
+            self.owned[slot].append(bid)
+        self.stats["hit_blocks"] += len(bids)
+
+    def register_block(self, slot: int, block_index: int, h: int,
+                       tokens) -> None:
+        """Publish a freshly-filled *full* block into the prefix index.
+
+        The caller (engine) computes ``h`` over ``tokens`` — the block's
+        token ids — chained on its parent; the ids are stored so lookups
+        can verify them against the query.  If another block already
+        canonically holds this prefix the index keeps it (no dedupe of
+        duplicate content — this block still records its hash and simply
+        frees on zero-ref instead of parking)."""
+        if not self.enable_prefix_cache:
+            return
+        bid = self.owned[slot][block_index]
+        if self.block_hash[bid] is not None:
+            return                        # already registered (cached hit)
+        self.block_hash[bid] = h
+        self.block_tokens[bid] = tuple(int(t) for t in tokens)
+        self.index.setdefault(h, bid)
+
+    # -- fork / copy-on-write ---------------------------------------------
+    def fork(self, src_slot: int, dst_slot: int) -> List[int]:
+        """Lease every block of ``src_slot`` to ``dst_slot`` too (ref++).
+
+        Both slots now read the same pool rows; the first append either
+        side makes into the shared partial tail must go through
+        :meth:`copy_on_write` first."""
+        assert not self.owned[dst_slot], "fork target must be empty"
+        for bid in self.owned[src_slot]:
+            self.refcount[bid] += 1
+        self.owned[dst_slot] = list(self.owned[src_slot])
+        return self.owned[dst_slot]
+
+    def copy_on_write(self, slot: int,
+                      block_index: int) -> Optional[Tuple[int, int]]:
+        """Make ``owned[slot][block_index]`` exclusively writable.
+
+        Returns (src, dst) block ids when a copy is needed — the caller
+        must copy the device rows src -> dst before writing — or None if
+        the block is already exclusive and unregistered (mutable)."""
+        bid = self.owned[slot][block_index]
+        if self.refcount[bid] == 1 and self.block_hash[bid] is None:
+            return None
+        new = self._pop_block()
+        assert self.refcount[new] == 0
+        self.refcount[new] = 1
+        self.owned[slot][block_index] = new
+        self._deref(bid)
+        self.stats["cow_copies"] += 1
+        return bid, new
+
+    def append_cost(self, slot: int, pos: int) -> int:
+        """New blocks a one-row append at ``pos`` would take: the grown
+        block (if ``pos`` opens one) plus a COW copy (if ``pos`` lands in
+        a block this slot cannot write — shared or registered)."""
+        need = max(0, self.blocks_needed(pos + 1) - len(self.owned[slot]))
+        bi = pos // self.cfg.block_size
+        if pos % self.cfg.block_size and bi < len(self.owned[slot]):
+            bid = self.owned[slot][bi]
+            if self.refcount[bid] > 1 or self.block_hash[bid] is not None:
+                need += 1
+        return need
+
+    def cow_for_append(self, slot: int,
+                       pos: int) -> Optional[Tuple[int, int]]:
+        """COW (if required) the block a one-row append at ``pos`` will
+        write into; None when the write target is already exclusive."""
+        if pos % self.cfg.block_size == 0:
+            return None                   # lands in a brand-new block
+        bi = pos // self.cfg.block_size
+        if bi >= len(self.owned[slot]):
+            return None
+        return self.copy_on_write(slot, bi)
+
+    # -- accounting --------------------------------------------------------
     def utilization(self) -> float:
-        used = self.cfg.n_blocks - len(self.free)
-        return used / self.cfg.n_blocks
+        """Fraction of the pool pinned by live leases (reclaimable cached
+        blocks count as free — they are capacity, not occupancy)."""
+        return (self.cfg.n_blocks - self.n_free()) / self.cfg.n_blocks
 
     def page_table(self) -> np.ndarray:
         pt = np.full((self.cfg.max_slots, self.cfg.max_blocks_per_seq),
@@ -106,6 +348,35 @@ class BlockAllocator:
         for s, blocks in enumerate(self.owned):
             pt[s, : len(blocks)] = blocks
         return pt
+
+    def debug_check(self) -> None:
+        """Assert the global invariants (tests call this after every op):
+        every block is in exactly one of {free, LRU, leased}; refcounts
+        equal lease multiplicity; index entries are coherent."""
+        lease_count = [0] * self.cfg.n_blocks
+        for blocks in self.owned:
+            for bid in blocks:
+                lease_count[bid] += 1
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "free list duplicates"
+        assert not free_set & set(self.lru), "block both free and cached"
+        for bid in range(self.cfg.n_blocks):
+            states = (int(bid in free_set) + int(bid in self.lru)
+                      + int(lease_count[bid] > 0))
+            assert states == 1, f"block {bid} in {states} states"
+            assert self.refcount[bid] == lease_count[bid], \
+                f"block {bid}: refcount {self.refcount[bid]} != " \
+                f"{lease_count[bid]} leases"
+            if bid in free_set:
+                assert self.block_hash[bid] is None
+            if bid in self.lru:
+                h = self.block_hash[bid]
+                assert h is not None and self.index.get(h) == bid
+            assert (self.block_hash[bid] is not None) == \
+                (bid in self.block_tokens), \
+                f"block {bid}: hash/token-id records out of sync"
+        for h, bid in self.index.items():
+            assert self.block_hash[bid] == h, "stale index entry"
 
 
 def init_pool(cfg: PagedConfig):

@@ -18,15 +18,36 @@ into an explicit Sarathi/vLLM-style scheduler:
     instead of ahead of them.  The engine executes the plan verbatim:
     chunks via ``model.prefill_chunk`` against the paged pool, decodes as
     one batched step.
+  * **Prefix reuse.**  Admission hashes the prompt's full blocks and asks
+    the allocator for the longest cached run
+    (``BlockAllocator.lookup_prefix``); hit blocks are mapped into the
+    slot read-only (ref++) and the first prefill chunk starts at
+    ``cached_len`` — the shared prefix executes **zero** prefill tokens.
+    At least one prompt token is always re-prefilled (the engine needs
+    last-token logits to sample from), so ``cached_len`` is capped at the
+    last full block strictly before ``len(tokens)``.  Blocks are *leases*:
+    release/preempt decrement refcounts, and capacity checks count
+    zero-ref cached blocks as reclaimable.
   * **Preemption.**  When a decode needs to grow into a new block and the
-    pool is exhausted, the newest-admitted sequence is preempted: its
-    blocks go back to the pool (``BlockAllocator.release``), the request
-    keeps its generated tokens host-side, and it is requeued for
-    recompute-on-resume — re-prefilled over ``prompt + output[:-1]``
-    (chunked, under the same budget), after which decode resumes by
+    pool is exhausted, a victim is preempted: its leases are dropped
+    (``BlockAllocator.release`` — registered blocks park on the LRU with
+    KV intact), the request keeps its generated tokens host-side, and it
+    is requeued for recompute-on-resume over ``prompt + output[:-1]``
+    (chunked, under the same budget; the resume admission re-runs the
+    prefix lookup, so a preempted sequence usually remaps its own still-
+    cached blocks instead of recomputing), after which decode resumes by
     re-feeding ``output[-1]``.  ``OutOfBlocks`` can no longer reach the
     serving path: the scheduler only grows through
-    ``BlockAllocator.can_allocate``.
+    ``BlockAllocator.can_allocate`` / ``append_cost``.
+  * **Starvation bound.**  Victims are picked newest-first among
+    sequences preempted fewer than ``preempt_limit`` times; a sequence
+    past the limit is exempt unless *every* running sequence is exempt,
+    so repeatedly evicted requests eventually hold their slot and finish.
+  * **Copy-on-write.**  A decode append that would land in a shared or
+    registered block (only reachable for the partial tail block mapped by
+    ``BlockAllocator.fork``) re-points the slot at a fresh block and
+    records the (src, dst) pair on ``StepPlan.cows``; the engine copies
+    the device rows before executing the step's writes.
   * **Progress guarantee.**  Every plan either does work, preempts, or
     rejects a request with ``.error`` (never-fits prompts, oversized
     ``max_new_tokens``, empty prompts) — the engine raises if a plan
@@ -41,7 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,6 +81,11 @@ class Sequence:
     kv_len: int = 0                          # total pool rows (grows in decode)
     order: int = -1                          # admission stamp (victims: newest)
     resuming: bool = False                   # recompute-after-preemption
+    cached_len: int = 0                      # prefix rows mapped from cache
+    prefix_hashes: Optional[List[int]] = None  # chain hashes of .tokens
+    block_hashes: List[int] = dataclasses.field(default_factory=list)
+    registered: int = 0                      # full blocks already in the index
+    n_preemptions: int = 0                   # starvation-bound counter
 
     @property
     def prefill_done(self) -> bool:
@@ -90,6 +116,11 @@ class StepPlan:
     decode_uids: List[int] = dataclasses.field(default_factory=list)
     preempted: List[int] = dataclasses.field(default_factory=list)  # uids
     rejected: List[Any] = dataclasses.field(default_factory=list)  # Requests
+    # copy-on-write (src, dst) block pairs the engine must copy on-device
+    # before executing this step's writes
+    cows: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # (uid, cached_len) for admissions that mapped a cached prefix
+    cached: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     def has_work(self) -> bool:
         return bool(self.prefills or self.decodes)
@@ -100,13 +131,15 @@ class StepPlan:
 
     def summary(self) -> Dict[str, Any]:
         """Compact, host-only trace entry (engine.plan_log; tests assert
-        chunk/decode interleaving on it)."""
+        chunk/decode interleaving and prefix-cache skips on it)."""
         return {
             "prefills": [(c.seq.req.uid, c.start, c.end)
                          for c in self.prefills],
             "decodes": list(self.decode_uids),
             "preempted": list(self.preempted),
             "rejected": [r.uid for r in self.rejected],
+            "cows": list(self.cows),
+            "cached": list(self.cached),
         }
 
 
@@ -121,17 +154,23 @@ class Scheduler:
 
     def __init__(self, max_slots: int, max_seq: int,
                  pager: Optional[BlockAllocator] = None,
-                 prefill_chunk_tokens: int = 512):
+                 prefill_chunk_tokens: int = 512,
+                 preempt_limit: int = 3):
         if prefill_chunk_tokens < 1:
             raise ValueError("prefill_chunk_tokens must be >= 1")
+        if preempt_limit < 1:
+            raise ValueError("preempt_limit must be >= 1")
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.pager = pager
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        self.preempt_limit = preempt_limit
         self.waiting: Deque[Sequence] = deque()
         self.running: Dict[int, Sequence] = {}
         self.n_preempted = 0
         self._order = 0
+        # prefix-cache admission stats (allocator keeps block-level ones)
+        self.prefix_stats = {"admissions": 0, "hits": 0, "cached_tokens": 0}
 
     # -- public API ------------------------------------------------------
     def add(self, req: Any) -> None:
@@ -198,10 +237,27 @@ class Scheduler:
                 seq.req.error = err
                 plan.rejected.append(seq.req)
                 continue
-            first = min(len(seq.tokens), budget)
+            # longest cached prefix of *full* blocks, capped so at least
+            # one prompt token is re-prefilled (its logits seed sampling)
+            bids: List[int] = []
+            hashes: List[int] = []
+            cached_len = 0
             if self.pager is not None:
-                first = min(first,
-                            self.pager.n_free() * self.pager.cfg.block_size)
+                bs = self.pager.cfg.block_size
+                if self.pager.enable_prefix_cache:
+                    if seq.prefix_hashes is None:  # once per (re)queued seq
+                        seq.prefix_hashes = \
+                            self.pager.prefix_hashes(seq.tokens)
+                    bids, hashes = self.pager.lookup_prefix(
+                        seq.tokens, seq.prefix_hashes)
+                    k = min(len(bids), (len(seq.tokens) - 1) // bs)
+                    bids, hashes = bids[:k], hashes[:k]
+                    cached_len = k * bs
+                # headroom for NEW blocks after mapping the cached run
+                first = min(len(seq.tokens) - cached_len, budget,
+                            self.pager.reusable_free_count(bids) * bs)
+            else:
+                first = min(len(seq.tokens), budget)
             if first <= 0:
                 break          # pool temporarily full: defer until released
             self.waiting.popleft()
@@ -209,12 +265,21 @@ class Scheduler:
             seq.order = self._order
             self._order += 1
             self.running[seq.slot] = seq
+            self.prefix_stats["admissions"] += 1
+            if bids:
+                self.pager.acquire_cached(seq.slot, bids)
+                seq.block_hashes = list(hashes)
+                seq.registered = len(bids)
+                seq.cached_len = seq.prefilled = seq.kv_len = cached_len
+                self.prefix_stats["hits"] += 1
+                self.prefix_stats["cached_tokens"] += cached_len
+                plan.cached.append((seq.req.uid, cached_len))
             budget -= self._plan_chunk(seq, budget, plan)
 
         # ---- deadlock guard: all running mid-prefill, no blocks, no
-        # decodes -> evict the newest so the older prefill can proceed --
+        # decodes -> evict a victim so the older prefill can proceed ----
         if not plan.has_work() and self.running:
-            self._preempt(self._newest_running(), plan)
+            self._preempt(self._select_victim(), plan)
         return plan
 
     # -- internals -------------------------------------------------------
@@ -246,20 +311,33 @@ class Scheduler:
                         f"{self.pager.cfg.n_blocks}")
         return None
 
-    def _newest_running(self) -> Sequence:
-        return max(self.running.values(), key=lambda s: s.order)
+    def _select_victim(self) -> Sequence:
+        """Newest-first among sequences under the starvation bound.
+
+        A sequence preempted ``preempt_limit`` times is exempt from
+        victim selection unless every running sequence is exempt (the
+        progress guarantee needs *someone* evictable); within the exempt
+        fallback the newest still goes first, so the oldest survivor
+        keeps its slot and eventually finishes."""
+        cands = list(self.running.values())
+        fair = [s for s in cands if s.n_preemptions < self.preempt_limit]
+        return max(fair or cands, key=lambda s: s.order)
 
     def _grow_for_decode(self, seq: Sequence, plan: StepPlan) -> bool:
         """Make room for one more KV row; True iff ``seq`` may decode.
 
-        Preempts newest-first until the growth fits.  If ``seq`` itself is
-        the newest, it is preempted (recompute-on-resume) — unless even an
+        The append may need a grown block *and* a copy-on-write block
+        (when the write position lands in a shared tail —
+        ``BlockAllocator.append_cost`` prices both).  Preempts victims
+        (``_select_victim``) until the growth fits.  If ``seq`` itself is
+        selected, it is preempted (recompute-on-resume) — unless even an
         empty pool could not hold it, in which case it fails with
         ``.error`` (it could never complete)."""
         if self.pager is None:
             return True
-        while not self.pager.can_allocate(seq.slot, seq.kv_len + 1):
-            victim = self._newest_running()
+        while (self.pager.append_cost(seq.slot, seq.kv_len)
+               > self.pager.n_free()):
+            victim = self._select_victim()
             if victim is seq:
                 whole_pool = self.pager.cfg.n_blocks
                 if self.pager.blocks_needed(seq.kv_len + 1) > whole_pool:
@@ -275,6 +353,9 @@ class Scheduler:
                 self._preempt(seq, plan)
                 return False
             self._preempt(victim, plan)
+        cow = self.pager.cow_for_append(seq.slot, seq.kv_len)
+        if cow is not None:
+            plan.cows.append(cow)
         self.pager.ensure(seq.slot, seq.kv_len + 1)
         return True
 
@@ -301,15 +382,34 @@ class Scheduler:
         return end - start
 
     def _preempt(self, seq: Sequence, plan: StepPlan) -> None:
-        """Evict ``seq``: blocks back to the pool, request requeued at the
-        front of ``waiting`` with its generated tokens preserved.  On
-        resume its KV is recomputed (chunked) over ``prompt +
-        output[:-1]``; the final sampled token has no KV yet and is
-        re-fed as the next decode input (``resuming`` suppresses the
-        duplicate first-token sample)."""
+        """Evict ``seq``: leases dropped (registered blocks stay cached
+        at zero refs), request requeued at the front of ``waiting`` with
+        its generated tokens preserved.  On resume its KV is recomputed
+        (chunked) over ``prompt + output[:-1]`` — re-admission re-runs
+        the prefix lookup, so whatever full blocks survived on the LRU
+        are remapped rather than recomputed; the final sampled token has
+        no KV yet and is re-fed as the next decode input (``resuming``
+        suppresses the duplicate first-token sample)."""
         if self.pager is not None:
+            if plan.cows:
+                # a COW planned for this victim earlier in the step maps
+                # a dst block that release() is about to free (and that
+                # may be re-leased within this very plan) — retract it so
+                # the engine never copies into a reassigned block.  The
+                # dst is ref-1 exclusive, so lease membership identifies
+                # the victim's pairs.
+                mine = set(self.pager.owned[seq.slot])
+                plan.cows[:] = [p for p in plan.cows if p[1] not in mine]
             self.pager.release(seq.slot)
         self.running.pop(seq.slot)
+        if seq.slot in plan.decodes:
+            # the starvation bound can pick a victim whose decode was
+            # already planned this step (an older sequence, when the
+            # newer ones are exempt) — retract it so the engine never
+            # executes a decode for an evicted slot.
+            i = plan.decodes.index(seq.slot)
+            plan.decodes.pop(i)
+            plan.decode_uids.pop(i)
         out = list(seq.req.output or [])
         if out:
             seq.tokens = np.concatenate(
@@ -321,6 +421,11 @@ class Scheduler:
         seq.slot = -1
         seq.prefilled = 0
         seq.kv_len = 0
+        seq.cached_len = 0
+        seq.prefix_hashes = None             # .tokens changed: rehash
+        seq.block_hashes = []
+        seq.registered = 0
+        seq.n_preemptions += 1
         self.n_preempted += 1
         plan.preempted.append(seq.req.uid)
         self.waiting.appendleft(seq)

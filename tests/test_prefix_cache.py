@@ -1,0 +1,437 @@
+"""Automatic prefix caching + copy-on-write across the serving stack.
+
+Covers the PR-3 acceptance criteria:
+  * a request whose prompt prefix is cached produces a **bit-identical**
+    greedy stream to the same request served cold (f32 and int8 pools),
+    while executing zero prefill-chunk tokens for the shared prefix
+    (asserted via ``Engine.plan_log``: every warm chunk starts at
+    ``cached_len``),
+  * two requests sharing a prefix then diverging mid-block both complete
+    with streams identical to isolated runs, and releasing one never
+    corrupts or frees the other's blocks (live refcounted sharing),
+  * forked sequences (shared partial tail) append through copy-on-write:
+    the plan carries (src, dst) pairs, the engine copies the device rows,
+    and the original stream is unaffected by the fork's divergence,
+  * same-shape prefill chunks from different slots run as ONE batched
+    device call (``metrics["chunk_batch_calls"]``),
+  * the scheduler's starvation bound exempts a sequence from victim
+    selection after ``preempt_limit`` preemptions.
+
+Bit-identity note: warm-vs-cold streams are compared with the cold run's
+chunk boundaries aligned to ``cached_len`` (same ``prefill_chunk_tokens``)
+so both executions trace the exact same device computations over the
+exact same pool rows — the suffix chunk shapes match, and decode reads
+the identical block content through the page table.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import Scheduler, Sequence
+
+
+def _f32_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(compute_dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _int8_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(
+        compute_dtype="float32", kv_cache_dtype="int8")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(m, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 8)
+    return Engine(m, params, **kw)
+
+
+def _chunks_of(eng, uid):
+    return [(s, e) for plan in eng.plan_log
+            for (u, s, e) in plan["prefills"] if u == uid]
+
+
+def _cached_of(eng, uid):
+    return [cl for plan in eng.plan_log
+            for (u, cl) in plan["cached"] if u == uid]
+
+
+# ---------------------------------------------------------------------------
+# warm request: zero prefix prefill tokens, bit-identical stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build", [_f32_model, _int8_model],
+                         ids=["f32", "int8"])
+def test_warm_request_skips_prefix_bit_identical(build):
+    """Cold then warm serve of the same 24-token prompt (block size 8,
+    chunk budget 16): the warm admission maps 2 cached full blocks
+    (cached_len = 16 — capped below the prompt so the last chunk yields
+    sampling logits), its only chunk covers [16, 24), and the greedy
+    stream matches the cold one bit for bit."""
+    m, params = build()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(4, 500, size=24).astype(np.int32)
+    eng = _engine(m, params, prefill_chunk_tokens=16)
+
+    ua = eng.submit(prompt, max_new_tokens=8, temperature=0.0)
+    (a,) = eng.run()
+    ub = eng.submit(prompt, max_new_tokens=8, temperature=0.0)
+    (b,) = eng.run()
+
+    assert a.error is None and b.error is None
+    assert a.output == b.output, "warm stream must be bit-identical"
+    assert _chunks_of(eng, ua) == [(0, 16), (16, 24)]
+    assert _cached_of(eng, ub) == [16]
+    warm = _chunks_of(eng, ub)
+    assert warm == [(16, 24)], \
+        f"shared prefix must execute zero prefill tokens, got {warm}"
+    assert eng.metrics["prefix_hits"] == 1
+    assert eng.metrics["prefix_cached_tokens"] == 16
+    eng.pager.debug_check()
+
+
+def test_prefix_caching_disabled_is_all_cold():
+    m, params = _f32_model()
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(4, 500, size=24).astype(np.int32)
+    eng = _engine(m, params, prefill_chunk_tokens=16, prefix_caching=False)
+    eng.submit(prompt, max_new_tokens=4, temperature=0.0)
+    eng.run()
+    ub = eng.submit(prompt, max_new_tokens=4, temperature=0.0)
+    eng.run()
+    assert eng.metrics["prefix_hits"] == 0
+    assert _chunks_of(eng, ub)[0] == (0, 16)
+    assert eng.pager.n_cached() == 0
+
+
+# ---------------------------------------------------------------------------
+# concurrent sharing: refcounted blocks, release never corrupts the peer
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_warm_requests_share_blocks_live():
+    """After a cold run registers the prefix, two warm requests admitted
+    in the SAME step lease the same cached blocks (refcount 2) — and the
+    first one finishing (shorter max_new_tokens) releases its lease
+    without corrupting or freeing the survivor's blocks."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(4, 500, size=24).astype(np.int32)
+    eng = _engine(m, params, prefill_chunk_tokens=64)
+    eng.submit(prompt, max_new_tokens=6, temperature=0.0)
+    (cold,) = eng.run()
+
+    ub = eng.submit(prompt, max_new_tokens=6, temperature=0.0)
+    uc = eng.submit(prompt, max_new_tokens=12, temperature=0.0)
+    eng.run(max_steps=1)                     # admission step only
+    pager = eng.pager
+    shared = [bid for bid in pager.owned[0] if bid in pager.owned[1]]
+    assert shared, "warm admissions must lease the same prefix blocks"
+    assert all(pager.refcount[bid] == 2 for bid in shared)
+    pager.debug_check()
+
+    done = {r.uid: r for r in eng.run()}
+    assert done[ub].output == cold.output
+    assert done[uc].output[:6] == cold.output, \
+        "survivor's stream must be unaffected by the peer's release"
+    assert len(done[uc].output) == 12
+    pager.debug_check()
+
+
+def test_divergent_mid_block_prompts_match_isolated_runs():
+    """Prompts sharing 12 tokens (1.5 blocks of 8) diverge inside block
+    1: only block 0 is reusable, and both streams equal the streams of
+    cold isolated serves (chunk boundaries aligned at 8)."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(3)
+    head = rng.integers(4, 500, size=12).astype(np.int32)
+    tails = [rng.integers(4, 500, size=4).astype(np.int32)
+             for _ in range(2)]
+    prompts = [np.concatenate([head, t]) for t in tails]
+
+    def isolated(p):
+        e = _engine(m, params, prefill_chunk_tokens=8)
+        e.submit(p, max_new_tokens=8, temperature=0.0)
+        (r,) = e.run()
+        return r.output
+
+    refs = [isolated(p) for p in prompts]
+    eng = _engine(m, params, prefill_chunk_tokens=8)
+    u0 = eng.submit(prompts[0], max_new_tokens=8, temperature=0.0)
+    done0 = eng.run()
+    u1 = eng.submit(prompts[1], max_new_tokens=8, temperature=0.0)
+    done1 = eng.run()
+    assert done0[0].output == refs[0]
+    assert done1[0].output == refs[1]
+    assert _cached_of(eng, u1) == [8], "only the full shared block reuses"
+    assert _chunks_of(eng, u1)[0][0] == 8
+    eng.pager.debug_check()
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: forked sequences append into a shared partial tail
+# ---------------------------------------------------------------------------
+
+
+def test_fork_cow_preserves_original_stream():
+    """Emulate n=2 parallel sampling: after the original has a partial
+    tail block, fork its leases into a second slot whose request diverges
+    at the last sampled token.  The next decode step must COW the shared
+    tail (plan.cows -> device copy), and the original's greedy stream
+    must be bit-identical to an unforked run."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(4, 500, size=10).astype(np.int32)
+
+    ref_eng = _engine(m, params)
+    ref_eng.submit(prompt, max_new_tokens=12, temperature=0.0)
+    (ref,) = ref_eng.run()
+
+    eng = _engine(m, params)
+    eng.submit(prompt, max_new_tokens=12, temperature=0.0)
+    eng.run(max_steps=3)                     # prefill + 2 decodes
+    (slot_a, seq_a), = eng.scheduler.running.items()
+    assert seq_a.kv_len % eng.page_size != 0, "fork wants a partial tail"
+
+    slot_b = 1 - slot_a
+    eng.pager.fork(slot_a, slot_b)
+    div = int((seq_a.req.output[-1] + 7) % 400 + 4)
+    req_b = Request(uid=999, prompt=np.asarray(prompt), max_new_tokens=8,
+                    temperature=0.0, output=seq_a.req.output[:-1] + [div])
+    seq_b = Sequence(req=req_b, prompt=seq_a.prompt, tokens=seq_a.tokens,
+                     slot=slot_b, prefilled=seq_a.prefilled,
+                     kv_len=seq_a.kv_len, order=eng.scheduler._order,
+                     block_hashes=list(seq_a.block_hashes),
+                     registered=seq_a.registered)
+    eng.scheduler._order += 1
+    eng.scheduler.running[slot_b] = seq_b
+    # the engine syncs device lens from scheduler state after each decode;
+    # a real fork API would do the same — the injected slot needs it once
+    eng.cache["lens"] = jnp.asarray(eng.scheduler.device_lens(), jnp.int32)
+
+    done = {r.uid: r for r in eng.run()}
+    assert eng.metrics["cow_copies"] >= 1, "shared tail append must COW"
+    cow_pairs = [p for plan in eng.plan_log for p in plan["cows"]]
+    assert cow_pairs
+    assert done[1].output == ref.output, \
+        "fork + divergence must not corrupt the original stream"
+    assert len(done[999].output) == 8 and done[999].output[2] == div
+    assert done[999].output != done[1].output[:8]
+    eng.pager.debug_check()
+
+
+def test_scheduler_plans_cow_for_shared_tail_append():
+    """Unit-level: two running sequences sharing a forked partial tail —
+    the first planned decode carries exactly one COW pair, after which
+    the tails are distinct and every lease is exclusive."""
+    from repro.serving.paged_cache import BlockAllocator, PagedConfig
+    pager = BlockAllocator(PagedConfig(
+        n_layers=1, n_kv_heads=1, head_dim=8, block_size=4, n_blocks=8,
+        max_slots=2, max_blocks_per_seq=8))
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64)
+
+    def req(uid):
+        return Request(uid=uid, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=8, output=[5])
+
+    a = Sequence(req=req(1), prompt=np.arange(6, dtype=np.int32),
+                 tokens=np.arange(6, dtype=np.int32), slot=0, prefilled=6,
+                 kv_len=6, order=0)
+    pager.ensure(0, 6)
+    pager.fork(0, 1)
+    b = Sequence(req=req(2), prompt=a.prompt, tokens=a.tokens, slot=1,
+                 prefilled=6, kv_len=6, order=1)
+    sched.running = {0: a, 1: b}
+    sched._order = 2
+
+    plan = sched.schedule()
+    assert sorted(plan.decodes) == [0, 1]
+    assert len(plan.cows) == 1, "one COW un-shares the tail for both"
+    src, dst = plan.cows[0]
+    # the first planned append (oldest seq) got the fresh copy; the
+    # other keeps the original — now exclusive
+    assert {pager.owned[0][1], pager.owned[1][1]} == {src, dst}
+    assert all(pager.refcount[blk] == 1
+               for s in (0, 1) for blk in pager.owned[s][1:])
+    pager.debug_check()
+
+
+def test_preempted_victim_cow_pairs_retracted():
+    """A victim whose decode (and COW) were already planned this step
+    must have BOTH retracted: the COW dst returns to the free list on
+    release and may be re-leased within the same plan, so a stale device
+    copy could clobber a live slot's rows."""
+    from repro.serving.paged_cache import BlockAllocator, PagedConfig
+    pager = BlockAllocator(PagedConfig(
+        n_layers=1, n_kv_heads=1, head_dim=8, block_size=4, n_blocks=4,
+        max_slots=2, max_blocks_per_seq=8))
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64,
+                      preempt_limit=2)
+
+    def mk(uid, slot, order, kv, n_pre):
+        r = Request(uid=uid, prompt=np.arange(6, dtype=np.int32),
+                    max_new_tokens=20, output=[5])
+        return Sequence(req=r, prompt=r.prompt, tokens=r.prompt,
+                        slot=slot, prefilled=6, kv_len=kv, order=order,
+                        n_preemptions=n_pre)
+
+    old = mk(1, 0, 0, 6, 0)                  # fair; shared partial tail
+    pager.ensure(0, 6)
+    pager.fork(0, 1)
+    new = mk(2, 1, 1, 12, 2)                 # exempt; needs a 4th block
+    pager.ensure(1, 12)
+    sched.running = {0: old, 1: new}
+    sched._order = 2
+
+    plan = sched.schedule()
+    # old planned decode+COW first, then new's growth evicted it (the
+    # only fair candidate) — decode AND cow retracted, new proceeds
+    assert plan.preempted == [1]
+    assert plan.decodes == [1] and plan.decode_uids == [2]
+    assert plan.cows == [], "victim's planned COW must be retracted"
+    assert pager.stats["cow_copies"] == 1    # allocator did copy-remap
+    pager.debug_check()
+
+
+# ---------------------------------------------------------------------------
+# batched chunk execution
+# ---------------------------------------------------------------------------
+
+
+def test_same_shape_chunks_run_as_one_batched_call():
+    """Two same-length prompts admitted in one step produce one batched
+    prefill_chunk_batch call (2 chunks, 1 call) with streams identical
+    to serving each prompt alone."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(4, 500, size=12).astype(np.int32)
+               for _ in range(2)]
+
+    def isolated(p):
+        e = _engine(m, params)
+        e.submit(p, max_new_tokens=6, temperature=0.0)
+        (r,) = e.run()
+        return r.output
+
+    refs = [isolated(p) for p in prompts]
+    eng = _engine(m, params)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6, temperature=0.0)
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    first = eng.plan_log[0]
+    assert len(first["prefills"]) == 2
+    assert eng.metrics["prefill_chunks"] == 2
+    assert eng.metrics["chunk_batch_calls"] == 1, \
+        "same-shape chunks must share one device call"
+    assert [r.output for r in done] == refs
+
+
+def test_different_shape_chunks_fall_back_to_separate_calls():
+    m, params = _f32_model()
+    rng = np.random.default_rng(6)
+    eng = _engine(m, params)
+    eng.submit(rng.integers(4, 500, size=12).astype(np.int32),
+               max_new_tokens=4, temperature=0.0)
+    eng.submit(rng.integers(4, 500, size=9).astype(np.int32),
+               max_new_tokens=4, temperature=0.0)
+    done = eng.run()
+    assert all(r.error is None for r in done)
+    assert eng.metrics["prefill_chunks"] == 2
+    assert eng.metrics["chunk_batch_calls"] == 2
+
+
+# ---------------------------------------------------------------------------
+# starvation bound
+# ---------------------------------------------------------------------------
+
+
+def test_starvation_bound_exempts_repeatedly_preempted():
+    """With the newer sequence already at preempt_limit, growth pressure
+    victimizes the OLDER (fair) sequence instead — the exempt one keeps
+    its slot and can finish."""
+    from repro.serving.paged_cache import BlockAllocator, PagedConfig
+    pager = BlockAllocator(PagedConfig(
+        n_layers=1, n_kv_heads=1, head_dim=8, block_size=4, n_blocks=4,
+        max_slots=2, max_blocks_per_seq=8))
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64,
+                      preempt_limit=2)
+
+    def mk(uid, slot, order, n_pre):
+        r = Request(uid=uid, prompt=np.arange(8, dtype=np.int32),
+                    max_new_tokens=8, output=[3])
+        s = Sequence(req=r, prompt=r.prompt, tokens=r.prompt, slot=slot,
+                     prefilled=8, kv_len=8, order=order,
+                     n_preemptions=n_pre)
+        pager.ensure(slot, 8)
+        return s
+
+    old = mk(1, 0, 0, 0)
+    new = mk(2, 1, 1, 2)                     # at the limit: exempt
+    sched.running = {0: old, 1: new}
+    sched._order = 2
+
+    plan = sched.schedule()                  # both decodes need a block
+    assert plan.preempted == [1], \
+        "victim must be the fair (older) sequence, not the exempt one"
+    assert plan.decodes == [1]
+    pager.debug_check()
+
+
+def test_starvation_bound_falls_back_when_all_exempt():
+    """If every running sequence is past the limit the newest is still
+    evictable — the progress guarantee outranks the bound."""
+    from repro.serving.paged_cache import BlockAllocator, PagedConfig
+    pager = BlockAllocator(PagedConfig(
+        n_layers=1, n_kv_heads=1, head_dim=8, block_size=4, n_blocks=4,
+        max_slots=2, max_blocks_per_seq=8))
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64,
+                      preempt_limit=1)
+
+    def mk(uid, slot, order):
+        r = Request(uid=uid, prompt=np.arange(8, dtype=np.int32),
+                    max_new_tokens=8, output=[3])
+        s = Sequence(req=r, prompt=r.prompt, tokens=r.prompt, slot=slot,
+                     prefilled=8, kv_len=8, order=order, n_preemptions=5)
+        pager.ensure(slot, 8)
+        return s
+
+    sched.running = {0: mk(1, 0, 0), 1: mk(2, 1, 1)}
+    sched._order = 2
+    plan = sched.schedule()
+    assert plan.preempted == [2] and plan.decodes == [0]
+
+
+def test_repeatedly_preempted_request_finishes_under_pressure():
+    """End-to-end: an oversubscribed pool with continuous contention
+    still drains every request (the bound guarantees the oldest survivor
+    makes progress), outputs identical to the uncontended run."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(4, 500, size=9).astype(np.int32)
+               for _ in range(3)]
+
+    def serve(n_pages):
+        eng = _engine(m, params, n_pages=n_pages, preempt_limit=2)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=14, temperature=0.0)
+        done = sorted(eng.run(), key=lambda r: r.uid)
+        assert all(r.error is None for r in done)
+        return [r.output for r in done], eng
+
+    contended, eng = serve(5)
+    assert eng.metrics["preemptions"] > 0
+    uncontended, _ = serve(None)
+    assert contended == uncontended
+    assert all(len(o) == 14 for o in contended)

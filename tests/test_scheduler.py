@@ -254,7 +254,10 @@ def test_oversubscribed_pool_preempts_and_completes():
 
 def test_preempted_mid_decode_resumes_without_resampling():
     """The resume prefill covers prompt + output[:-1] and must not emit a
-    duplicate token: output lengths stay exactly max_new_tokens."""
+    duplicate token: output lengths stay exactly max_new_tokens.  A
+    resume admission is either cold (first chunk at position 0) or — now
+    that released registered blocks park on the allocator's LRU — a
+    cached-prefix remap recorded in the plan's ``cached`` entries."""
     m, params = _f32_model()
     rng = np.random.default_rng(5)
     prompts = [rng.integers(4, 500, size=9).astype(np.int32)
@@ -265,13 +268,16 @@ def test_preempted_mid_decode_resumes_without_resampling():
     done = sorted(eng.run(), key=lambda r: r.uid)
     assert eng.metrics["preemptions"] > 0
     assert [len(r.output) for r in done] == [12, 12, 12]
-    preempted_uids = {u for plan in eng.plan_log for u in plan["preempted"]}
-    resumed_chunks = [(u, s, e) for plan in eng.plan_log
-                      for (u, s, e) in plan["prefills"]
-                      if u in preempted_uids and s == 0]
-    # every preempted sequence recomputes from position 0 (its original
-    # admission chunk plus >= 1 resume chunk)
-    assert len(resumed_chunks) >= 2 * len(preempted_uids)
+    preempted = [u for plan in eng.plan_log for u in plan["preempted"]]
+    assert preempted
+    for u in set(preempted):
+        cold = [(s, e) for plan in eng.plan_log
+                for (uu, s, e) in plan["prefills"] if uu == u and s == 0]
+        cached = [cl for plan in eng.plan_log
+                  for (uu, cl) in plan["cached"] if uu == u]
+        # one admission per (preemption + 1): each is cold or a remap
+        assert len(cold) + len(cached) == preempted.count(u) + 1, \
+            (u, cold, cached)
 
 
 # ---------------------------------------------------------------------------
