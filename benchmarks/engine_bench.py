@@ -12,7 +12,15 @@ exercise the scheduler subsystem end to end:
   * **shared_prefix** — N requests over M distinct system prompts served
     twice, prefix caching on vs off: reports the hit rate, prefill
     tokens/blocks saved, and the TTFT deltas the cache buys (CI fails if
-    the hit rate silently drops to zero — see ci/run_ci.sh).
+    the hit rate silently drops to zero — see ci/run_ci.sh),
+  * **parallel_sampling** — ``n_samples=4`` best-of-n requests fanning
+    out over ``BlockAllocator.fork``: each group prefills its prompt
+    once and its four siblings share the prompt blocks read-only
+    (diverging tails un-share via COW).  Reports peak live blocks
+    against the ``prompt + n*tail`` sharing bound, blocks saved by fork
+    sharing (CI fails at zero), decode tok/s, and verifies each sibling
+    of the probe request is bit-identical to an independent
+    (seed, stream=i) rerun.
 
 Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
 artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
@@ -42,6 +50,12 @@ SP_SYSTEM_PROMPTS = 3
 SP_REQUESTS = 12
 SP_SYSTEM_LEN = 48           # 3 full blocks of 16 -> cacheable prefix
 SP_SUFFIX_LEN = 8
+
+# parallel-sampling workload: best-of-4 requests over a 3-block prompt
+PS_REQUESTS = 3
+PS_N_SAMPLES = 4
+PS_PROMPT_LEN = 48           # 3 full blocks of 16, shared by all siblings
+PS_MAX_NEW = 16              # each sibling's divergent tail: 1 block
 
 
 def _build_model():
@@ -139,6 +153,102 @@ def run_shared_prefix(model, params, quiet: bool = False,
     return result
 
 
+def run_parallel_sampling(model, params, quiet: bool = False) -> dict:
+    """Serve PS_REQUESTS ``n_samples=4`` requests twice on one engine
+    (round 1 compiles + provides the cold reference streams; round 2 is
+    measured) and report what fork sharing bought.
+
+    Every group admits once, prefills its 48-token prompt once, and fans
+    out into 4 siblings whose page tables all point at the same 3 prompt
+    blocks — so a group's peak footprint is ``prompt + 4*tail`` blocks
+    instead of 4 full copies.  The probe request's four siblings are
+    re-served as independent (seed, stream=i) requests and must match
+    bit for bit (the fanout bit-exactness acceptance bar — raises on
+    violation rather than reporting a quietly-wrong speedup)."""
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(4, 500, size=PS_PROMPT_LEN).astype(np.int32)
+               for _ in range(PS_REQUESTS)]
+    max_slots, max_seq, page = 8, 128, 16
+
+    def submit_all(eng):
+        return [eng.submit(p, max_new_tokens=PS_MAX_NEW, temperature=1.0,
+                           seed=200 + i, n_samples=PS_N_SAMPLES)
+                for i, p in enumerate(prompts)]
+
+    eng = Engine(model, params, max_slots=max_slots, max_seq=max_seq,
+                 page_size=page, prefill_chunk_tokens=64)
+    uids = submit_all(eng)
+    cold = {r.uid: r for r in eng.run()}
+    assert all(cold[u].error is None for u in uids)
+
+    # the probe group's siblings vs independent reruns (cold vs cold:
+    # identical chunk boundaries, so the streams must be bit-identical)
+    probe = cold[uids[0]].outputs
+    for i in range(PS_N_SAMPLES):
+        solo = Engine(model, params, max_slots=max_slots, max_seq=max_seq,
+                      page_size=page, prefill_chunk_tokens=64)
+        solo.submit(prompts[0], max_new_tokens=PS_MAX_NEW, temperature=1.0,
+                    seed=200, stream=i)
+        (r,) = solo.run()
+        if r.output != probe[i]:
+            raise AssertionError(
+                f"sibling {i} diverged from its independent rerun:\n"
+                f"  group: {probe[i]}\n  rerun: {r.output}")
+
+    # measured round: decode is compiled now; deltas isolate the round
+    eng.metrics["blocks_live_peak"] = 0
+    eng.metrics["blocks_saved_by_sharing_peak"] = 0
+    toks0, t0 = eng.metrics["tokens_out"], eng.metrics["t_decode"]
+    uids = submit_all(eng)
+    done = {r.uid: r for r in eng.run()}
+    assert all(done[u].error is None for u in uids)
+    tok_s = ((eng.metrics["tokens_out"] - toks0)
+             / max(1e-9, eng.metrics["t_decode"] - t0))
+
+    prompt_blocks = PS_PROMPT_LEN // page
+    tail_blocks = -(-(PS_PROMPT_LEN + PS_MAX_NEW) // page) - prompt_blocks
+    groups_at_once = max_slots // PS_N_SAMPLES
+    bound = groups_at_once * (prompt_blocks + PS_N_SAMPLES * tail_blocks)
+    naive = groups_at_once * PS_N_SAMPLES * (prompt_blocks + tail_blocks)
+    peak = eng.metrics["blocks_live_peak"]
+    if peak > bound:
+        raise AssertionError(
+            f"fanout peak {peak} blocks exceeds the sharing bound {bound} "
+            f"(prompt {prompt_blocks} + {PS_N_SAMPLES}*{tail_blocks} tails "
+            f"x {groups_at_once} concurrent groups)")
+
+    result = {
+        "requests": PS_REQUESTS,
+        "n_samples": PS_N_SAMPLES,
+        "prompt_len": PS_PROMPT_LEN,
+        "max_new_tokens": PS_MAX_NEW,
+        "page_size": page,
+        "prompt_blocks": prompt_blocks,
+        "tail_blocks_per_sibling": tail_blocks,
+        "concurrent_groups": groups_at_once,
+        "blocks_live_peak": peak,
+        "blocks_bound_shared": bound,
+        "blocks_naive_unshared": naive,
+        "blocks_saved_by_sharing_peak":
+            eng.metrics["blocks_saved_by_sharing_peak"],
+        "fanouts": eng.metrics["fanouts"],
+        "cow_copies": eng.metrics["cow_copies"],
+        "decode_tok_s": float(tok_s),
+        "siblings_bitexact": True,
+    }
+    if not quiet:
+        print(f"enginebench/fanout_blocks_peak,{peak},blocks"
+              f" (bound {bound}, unshared would be {naive})")
+        print(f"enginebench/fanout_blocks_saved,"
+              f"{result['blocks_saved_by_sharing_peak']},blocks"
+              f" ({result['fanouts']} fanouts,"
+              f" {result['cow_copies']} COW copies)")
+        print(f"enginebench/fanout_decode_tok_s,{tok_s:.1f},tok/s")
+    return result
+
+
 def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         max_new_tokens: int = 16) -> dict:
     from repro.serving.engine import Engine
@@ -180,6 +290,8 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         "preemptions": eng.metrics["preemptions"],
     }
     result["shared_prefix"] = run_shared_prefix(model, params, quiet=quiet)
+    result["parallel_sampling"] = run_parallel_sampling(model, params,
+                                                        quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:

@@ -10,7 +10,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export ARTIFACTS_DIR="${ARTIFACTS_DIR:-artifacts}"
 mkdir -p "$ARTIFACTS_DIR"
 
-python -m pytest -q -x
+# Engine property suite first, as its own pinned gate: the hypothesis
+# variants are derandomized with deadline=None (no deadline flakes;
+# they self-skip when hypothesis is absent from the image) and their
+# deterministic seeded twins run everywhere with the exact seeds baked
+# into the tests.  The main run below ignores the file so the suite
+# executes exactly once per CI job.
+python -m pytest -q tests/test_engine_properties.py
+
+python -m pytest -q -x --ignore=tests/test_engine_properties.py
 
 python - <<'EOF'
 import json
@@ -41,9 +49,25 @@ print(f"  ttft_ms_p50 warm={sp['ttft_ms_p50_warm']:.1f} "
 print(f"  mixed: preemptions={bench['preemptions']} "
       f"prefill_chunks={bench['prefill_chunks']} "
       f"in {bench['chunk_batch_calls']} batched calls")
+ps = bench["parallel_sampling"]
+print(f"  fanout: peak={ps['blocks_live_peak']} "
+      f"bound={ps['blocks_bound_shared']} "
+      f"unshared={ps['blocks_naive_unshared']} "
+      f"saved={ps['blocks_saved_by_sharing_peak']} "
+      f"tok_s={ps['decode_tok_s']:.1f}")
 if sp["prefix_hit_rate"] <= 0 or sp["cached_tokens"] <= 0:
     sys.exit("FAIL: shared-prefix workload reports a zero prefix-cache "
              "hit rate — prefix caching is silently broken or disabled")
 if sp["prefill_tokens_warm"] >= sp["prefill_tokens_cold"]:
     sys.exit("FAIL: prefix caching did not reduce executed prefill tokens")
+# Fanout tripwire: the n_samples=4 workload must actually share blocks
+# across siblings — zero savings means fork sharing silently degraded
+# to per-sibling copies (the bench itself raises if any sibling's
+# stream diverges from its independent rerun or the peak exceeds the
+# prompt + n*tail bound).
+if ps["blocks_saved_by_sharing_peak"] <= 0:
+    sys.exit("FAIL: n_samples=4 fanout bench reports zero blocks saved "
+             "by fork sharing")
+if not ps["siblings_bitexact"]:
+    sys.exit("FAIL: fanout siblings diverged from independent reruns")
 EOF

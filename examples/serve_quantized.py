@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--q4", action="store_true",
                     help="4-bit weights (paper §5.1 future work)")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--n-samples", type=int, default=1,
+                    help="best-of-n parallel sampling per request: the "
+                         "prompt prefills once, n siblings fork its KV "
+                         "blocks and diverge via copy-on-write")
     args = ap.parse_args()
 
     cfg = reduced(get_config("llama2-110m"))
@@ -42,17 +46,28 @@ def main():
         plen = int(rng.integers(4, 24))
         eng.submit(rng.integers(4, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=int(rng.integers(8, 24)),
-                   temperature=1.0, top_p=0.9)
+                   temperature=1.0, top_p=0.9, seed=i,
+                   n_samples=args.n_samples)
     done = eng.run()
     wall = time.perf_counter() - t0
 
     for r in sorted(done, key=lambda r: r.uid)[:4]:
+        if r.error is not None:
+            print(f"  req {r.uid}: rejected — {r.error}")
+            continue
+        lens = "/".join(str(len(o)) for o in r.outputs)
         print(f"  req {r.uid}: prompt {len(r.prompt)} tok -> "
-              f"{len(r.output)} new tok, "
+              f"{lens} new tok across {len(r.outputs)} sample(s), "
               f"TTFT {1e3*(r.t_first_token-r.t_enqueue):.0f} ms")
     print(f"{len(done)} requests, {eng.metrics['tokens_out']} tokens, "
           f"{eng.metrics['tokens_out']/wall:.1f} tok/s wall "
           f"({eng.throughput_tok_s():.1f} tok/s decode-only)")
+    if args.n_samples > 1:
+        print(f"fork sharing: {eng.metrics['fanouts']} fanouts, peak "
+              f"{eng.metrics['blocks_live_peak']} live blocks, "
+              f"{eng.metrics['blocks_saved_by_sharing_peak']} blocks "
+              f"saved by shared prompt KV, "
+              f"{eng.metrics['cow_copies']} COW copies")
 
 
 if __name__ == "__main__":

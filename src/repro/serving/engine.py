@@ -42,15 +42,43 @@ Sampling matches the paper's evaluation setup: temperature 1.0, top-p 1.0
 (A.1) — but each request's ``temperature``/``top_p`` are honored, threaded
 through one vectorized sampler call per step (no per-slot Python loops).
 
+**Parallel sampling (the ``Request.n_samples`` contract).**  A request
+with ``n_samples = n > 1`` is best-of-n: it admits once, prefills its
+prompt once, and at the first sampled token fans out into ``n`` sibling
+sequences — ``sample_logits_per_row`` draws ``n`` tokens from the ONE
+prompt-logits row, then ``Scheduler.fork_group`` leases the parent's
+blocks into ``n - 1`` reserved slots (prompt KV shared read-only,
+refcounted; diverging tails un-share lazily through copy-on-write).  On
+completion ``Request.outputs`` is a list of ``n`` token lists, one per
+sibling, and ``Request.output`` aliases ``outputs[0]``; ``t_first_token``
+stamps the fanout (all siblings share it) and the request is done when
+its last sibling finishes.  ``outputs`` is populated (as ``[output]``)
+for ``n_samples=1`` requests too.  Requires the paged pool —
+``cache_kind="dense"`` rejects ``n > 1`` with ``.error``.
+
+**Sampling streams.**  Every request owns a PRNG root: ``PRNGKey(seed)``
+when ``Request.seed`` is set, else split off the engine key at submit.
+Sibling ``i`` samples from the stream ``fold_in(root, stream + i)``
+(``Request.stream`` defaults to 0), and its ``t``-th token uses
+``fold_in(stream_key, t)`` — so a sibling's draw depends only on (root,
+stream index, position), never on batch composition or scheduling order.
+That is what makes fanout *bit-exact*: sibling ``i`` of an
+``(seed=s, n_samples=n)`` request produces the identical token stream to
+an independent ``(seed=s, stream=i, n_samples=1)`` request — proved in
+tests/test_prefix_cache.py, exploited by ``Request.stream`` to shard one
+logical best-of-n across engines.  Per-sibling ``stop_tokens`` (on top
+of the global ``eos_id``) let siblings in one group retire on different
+ids.
+
 Knobs: ``prefill_chunk_tokens`` bounds prompt work per step (the
 prefill/decode interleaving grain); ``page_size``/``n_pages`` size the
 pool; ``prefix_caching`` toggles the block index (on by default);
 ``preempt_limit`` is the scheduler's starvation bound.  ``Engine.plan_log``
 keeps the executed step plans (uids, chunk ranges, preemptions, COW
-pairs, cached-prefix admissions) for inspection — tests assert
+pairs, cached-prefix admissions, fanouts) for inspection — tests assert
 chunk/decode interleaving and prefix skips on it, and
-benchmarks/engine_bench.py reports preemption counts and prefix-cache
-hit rates from it.
+benchmarks/engine_bench.py reports preemption counts, prefix-cache hit
+rates and fork-sharing block savings from it.
 """
 
 from __future__ import annotations
@@ -58,7 +86,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -77,12 +105,20 @@ class Request:
     max_new_tokens: int = 64
     temperature: float = 1.0
     top_p: float = 1.0
+    n_samples: int = 1            # best-of-n: fork n siblings at token 1
+    seed: Optional[int] = None    # PRNG root (None: engine-assigned)
+    stream: int = 0               # sampling-stream offset (sibling i
+    #                               draws stream ``stream + i``)
+    stop_tokens: Optional[Sequence[int]] = None  # per-request stop ids
+    #                               honored alongside the global eos_id
     # filled by the engine:
-    output: Optional[List[int]] = None
+    output: Optional[List[int]] = None           # == outputs[0]
+    outputs: Optional[List[List[int]]] = None    # one stream per sibling
     t_enqueue: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     error: Optional[str] = None   # set when the engine rejects the request
+    rng_key: Any = None           # PRNG root (derived from seed / engine)
 
 
 def sample_logits(key, logits: jax.Array, temperature=1.0,
@@ -110,6 +146,26 @@ def sample_logits(key, logits: jax.Array, temperature=1.0,
     masked = jnp.where(scaled >= thresh, scaled, -jnp.inf)
     sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
     return jnp.where(t <= 0.0, greedy, sampled)
+
+
+def sample_logits_per_row(keys, logits: jax.Array, temperature=1.0,
+                          top_p=1.0) -> jax.Array:
+    """Per-row *keyed* temperature + nucleus sampling.
+
+    ``keys`` is a stacked (B, key) array — one PRNG key per row — and
+    row ``i``'s draw depends only on ``(keys[i], logits[i],
+    temperature[i], top_p[i])``.  That row-independence is the engine's
+    bit-exactness lever: a sequence's sampled stream is identical
+    whether its row is batched with 0 or B-1 others, so a fork sibling
+    replays exactly as an independent request and a preempted sequence
+    resumes its stream unchanged.  (``sample_logits`` above draws the
+    whole batch from ONE key, which ties each row's outcome to the batch
+    composition.)"""
+    b = logits.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+    p = jnp.broadcast_to(jnp.asarray(top_p, jnp.float32), (b,))
+    one = lambda k, l, tt, pp: sample_logits(k, l[None], tt, pp)[0]
+    return jax.vmap(one)(keys, logits, t, p)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -182,8 +238,11 @@ class Engine:
                         "prefill_chunks": 0, "preemptions": 0,
                         "chunk_batch_calls": 0, "cow_copies": 0,
                         "prefix_hits": 0, "prefix_cached_tokens": 0,
-                        "prefix_evictions": 0}
+                        "prefix_evictions": 0, "fanouts": 0,
+                        "blocks_live_peak": 0,
+                        "blocks_saved_by_sharing_peak": 0}
         self._host_pt: Optional[np.ndarray] = None
+        self._done_at_prefill: List[Request] = []  # first-token stops
         self._uid = 0
 
     # -- public API ---------------------------------------------------------
@@ -191,6 +250,10 @@ class Engine:
         self._uid += 1
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
                       t_enqueue=time.perf_counter(), output=[], **kw)
+        if req.seed is not None:
+            req.rng_key = jax.random.PRNGKey(req.seed)
+        else:
+            self.key, req.rng_key = jax.random.split(self.key)
         self.scheduler.add(req)
         return req.uid
 
@@ -244,8 +307,25 @@ class Engine:
                 self.metrics["cow_copies"] += len(plan.cows)
             for group in self._chunk_groups(plan.prefills):
                 self._run_chunks(group)
+            if self._done_at_prefill:
+                # sequences whose FIRST sampled token was terminal (stop
+                # id / eos / max_new_tokens=1) retired inside the chunk
+                done.extend(self._done_at_prefill)
+                self._done_at_prefill = []
             if plan.decodes:
                 done.extend(self._decode_once(plan.decodes))
+            if self.paged:
+                # fork-sharing accounting: each lease beyond a block's
+                # first is a block NOT copied (shared prompt KV)
+                live = shared = 0
+                for rc in self.pager.refcount:
+                    if rc > 0:
+                        live += 1
+                        shared += rc - 1
+                self.metrics["blocks_live_peak"] = max(
+                    self.metrics["blocks_live_peak"], live)
+                self.metrics["blocks_saved_by_sharing_peak"] = max(
+                    self.metrics["blocks_saved_by_sharing_peak"], shared)
         return done
 
     def cache_utilization(self) -> float:
@@ -297,22 +377,92 @@ class Engine:
                 self._merge_slot_cache(c.seq.slot, pcache, c.end)
                 self._finish_chunk(c, logits)
 
+    def _stop_hit(self, seq, tok: int) -> bool:
+        """The per-token finish predicate — shared by the decode loop
+        and the first-token sample so a stop id (or ``max_new_tokens=1``)
+        retires a sequence no matter where the token came from."""
+        req = seq.req
+        return (tok == self.eos_id
+                or (req.stop_tokens is not None and tok in req.stop_tokens)
+                or len(seq.output) >= req.max_new_tokens
+                or seq.kv_len >= self.max_seq - 1)
+
+    def _finish_seq(self, seq) -> Optional[Request]:
+        """Retire one sequence; returns the Request when it completed the
+        whole request (its group's last sibling, or a singleton)."""
+        req = seq.req
+        self.scheduler.finish(seq.slot)
+        if seq.group is not None:
+            seq.group.finished += 1
+            if seq.group.finished < seq.group.n:
+                return None      # request done only when ALL siblings are
+        req.t_done = time.perf_counter()
+        if req.outputs is None:
+            req.outputs = [seq.output]
+        self.metrics["requests_done"] += 1
+        return req
+
+    def _seq_key(self, seq) -> jax.Array:
+        """The sequence's sampling-stream root:
+        ``fold_in(request_root, stream + sibling_index)`` — position
+        ``t`` then draws with ``fold_in(stream_root, t)``."""
+        if seq.sample_key is None:
+            seq.sample_key = jax.random.fold_in(
+                seq.req.rng_key, seq.req.stream + seq.sibling_index)
+        return seq.sample_key
+
     def _finish_chunk(self, chunk: PrefillChunk, logits) -> None:
         """Per-chunk bookkeeping after the device call: count it and, on
-        the prompt's last chunk, sample the first output token."""
+        the prompt's last chunk, sample the first output token — for an
+        ``n_samples > 1`` request, ``n`` tokens from this ONE logits row,
+        then fan the sequence out into its fork siblings."""
         seq, req = chunk.seq, chunk.seq.req
         self.metrics["prefill_chunks"] += 1
-        if chunk.last:
-            if seq.resuming:
-                # recompute-on-resume: the token after this prefix was
-                # already sampled before preemption; decode re-feeds it.
-                seq.resuming = False
-            else:
-                self.key, sub = jax.random.split(self.key)
-                first = sample_logits(sub, logits, req.temperature,
-                                      req.top_p)
-                req.output.append(int(first[0]))
-                req.t_first_token = time.perf_counter()
+        if not chunk.last:
+            return
+        if seq.resuming:
+            # recompute-on-resume: the token after this prefix was
+            # already sampled before preemption; decode re-feeds it.
+            seq.resuming = False
+            return
+        n = req.n_samples
+        keys = jnp.stack([jax.random.fold_in(self._seq_key(seq), 0)]
+                         if n == 1 else
+                         [jax.random.fold_in(
+                             jax.random.fold_in(req.rng_key,
+                                                req.stream + i), 0)
+                          for i in range(n)])
+        first = np.asarray(sample_logits_per_row(
+            keys, jnp.broadcast_to(logits[:1], (n, logits.shape[-1])),
+            req.temperature, req.top_p))
+        if n == 1:
+            sibs = [seq]
+            seq.output.append(int(first[0]))
+            req.outputs = [seq.output]
+        else:
+            sibs = self.scheduler.fork_group(seq)
+            for i, s in enumerate(sibs):
+                s.output.append(int(first[i]))
+            req.outputs = [s.output for s in sibs]
+            self.metrics["fanouts"] += 1
+            self.plan_log[-1].setdefault("forked", []).append((req.uid, n))
+            # sibling rows must carry the shared prompt length before
+            # their first decode; their page-table rows publish at the
+            # next step's republish (decode this step drops them: the
+            # device still sees -1 in row 0 and pins the len back to 0,
+            # which the post-decode resync overwrites)
+            rows = jnp.asarray([s.slot for s in sibs[1:]], jnp.int32)
+            self.cache["lens"] = jnp.asarray(self.cache["lens"]) \
+                .at[rows].set(seq.kv_len)
+        req.t_first_token = time.perf_counter()
+        for s in sibs:
+            # a first token can already be terminal (a stop id, eos, or
+            # max_new_tokens=1) — retire the sibling here instead of
+            # decoding past its stop
+            if self._stop_hit(s, s.output[-1]):
+                done = self._finish_seq(s)
+                if done is not None:
+                    self._done_at_prefill.append(done)
 
     def _register_blocks(self, seq) -> None:
         """Publish every freshly-filled FULL block of ``seq`` into the
@@ -330,7 +480,7 @@ class Engine:
         # rows hold (possibly resumed) prompt tokens, each decode row
         # holds the token fed that step — output[-1] at planning time.
         ids = np.concatenate(
-            [seq.prompt, np.asarray(seq.req.output or [], np.int32)])
+            [seq.prompt, np.asarray(seq.output or [], np.int32)])
         for j in range(seq.registered, full):
             parent = seq.block_hashes[j - 1] if j else None
             block = ids[j * bs:(j + 1) * bs]
@@ -365,41 +515,45 @@ class Engine:
         """One batched decode step for the planned ``slots``.  The device
         step touches every row; rows outside ``slots`` (free slots, or a
         mid-prefill sequence whose next chunk overwrites the same
-        position) are ignored and their lengths re-synced after."""
+        position) are ignored and their lengths re-synced after.
+        Sampling is per-row keyed (``sample_logits_per_row``) so each
+        sequence draws from its own stream regardless of who shares the
+        batch."""
         tokens = np.zeros((self.max_slots,), np.int32)
         temps = np.ones((self.max_slots,), np.float32)
         top_ps = np.ones((self.max_slots,), np.float32)
+        key_rows: List[Any] = [None] * self.max_slots
         for i in slots:
-            req = self.scheduler.running[i].req
-            tokens[i] = req.output[-1]
-            temps[i] = req.temperature
-            top_ps[i] = req.top_p
+            seq = self.scheduler.running[i]
+            tokens[i] = seq.output[-1]
+            temps[i] = seq.req.temperature
+            top_ps[i] = seq.req.top_p
+            key_rows[i] = jax.random.fold_in(self._seq_key(seq),
+                                             len(seq.output))
+        zero = jax.random.PRNGKey(0)
+        keys = jnp.stack([k if k is not None else zero for k in key_rows])
 
         t0 = time.perf_counter()
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens))
-        self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(sample_logits(sub, logits, jnp.asarray(temps),
-                                       jnp.asarray(top_ps)))
+        nxt = np.asarray(sample_logits_per_row(
+            keys, logits, jnp.asarray(temps), jnp.asarray(top_ps)))
         self.metrics["decode_steps"] += 1
         self.metrics["t_decode"] += time.perf_counter() - t0
 
         finished: List[Request] = []
         for i in slots:
             seq = self.scheduler.running[i]
-            req = seq.req
             tok = int(nxt[i])
-            req.output.append(tok)
+            seq.output.append(tok)
             self.metrics["tokens_out"] += 1
             # the step's KV row is in the pool now; if it completed a
             # block, publish it (before a finish drops the lease).
             self._register_blocks(seq)
-            if tok == self.eos_id or len(req.output) >= req.max_new_tokens \
-                    or seq.kv_len >= self.max_seq - 1:
-                req.t_done = time.perf_counter()
-                finished.append(req)
-                self.metrics["requests_done"] += 1
-                self.scheduler.finish(i)
+            if self._stop_hit(seq, tok):
+                done_req = self._finish_seq(seq)
+                if done_req is not None:
+                    finished.append(done_req)
         # the scheduler's lengths are authoritative: decoded rows were
         # advanced at planning time, finished/free rows drop to 0, and a
         # mid-prefill row whose position the batched step bumped gets its

@@ -313,6 +313,26 @@ class BlockAllocator:
         self.stats["cow_copies"] += 1
         return bid, new
 
+    def fork_cost(self, length: int, n: int) -> int:
+        """Fresh blocks the first divergent token of every sibling needs
+        after fanning a ``length``-token sequence out into ``n`` forks.
+
+        Fork itself allocates nothing (ref++ only); the cost lands when
+        each sibling writes its first own token:
+
+          * ``length`` block-aligned — the shared tail is full (and
+            registered, hence immutable), so *every* sibling opens a
+            fresh block: ``n``.
+          * partial tail — ``n - 1`` copy-on-write blocks (the last
+            writer keeps the original once its refcount drops to 1).
+
+        Admission prices a sampling group as ``blocks_needed(prompt) +
+        fork_cost`` so the fanout's first decode step never finds the
+        pool so tight that every sibling must immediately preempt."""
+        if n <= 1:
+            return 0
+        return n if length % self.cfg.block_size == 0 else n - 1
+
     def append_cost(self, slot: int, pos: int) -> int:
         """New blocks a one-row append at ``pos`` would take: the grown
         block (if ``pos`` opens one) plus a COW copy (if ``pos`` lands in

@@ -52,10 +52,29 @@ into an explicit Sarathi/vLLM-style scheduler:
     rejects a request with ``.error`` (never-fits prompts, oversized
     ``max_new_tokens``, empty prompts) — the engine raises if a plan
     makes no progress while work remains, instead of spinning.
+  * **Sampling groups.**  A request with ``n_samples = n > 1`` admits
+    *once* (one :class:`SamplingGroup`, one prompt prefill) while its
+    admission reserves ``n`` slots and prices the pool as
+    ``prompt_blocks + fork_cost`` (``BlockAllocator.fork_cost``).  When
+    the prompt's last chunk completes, the engine calls
+    :meth:`Scheduler.fork_group`: ``n - 1`` sibling sequences are
+    created into the reserved slots, each ``fork``-ing the parent's
+    block leases (prompt KV shared read-only, refcounted); the siblings'
+    diverging tails un-share lazily through the existing COW path on
+    their first appends.  Siblings decode/finish independently but are
+    **preempted as a unit** when *external* growth pressure victimizes
+    any of them (all planned decodes and COW pairs of the group retract
+    in the same step), so a half-evicted group never wedges the pool;
+    intra-group contention instead sheds one sibling at a time so the
+    grower always makes progress.  A preempted sibling resumes like any
+    sequence — recompute over ``prompt + output[:-1]``, which remaps the
+    still-registered shared prompt blocks from the prefix index instead
+    of recomputing them.
 
 The dense (non-paged) fallback uses the same scheduler with ``pager=None``:
 prompts are planned as one whole-prompt chunk (the contiguous cache has
-no block granularity to chunk into) and preemption never triggers.
+no block granularity to chunk into), preemption never triggers, and
+``n_samples > 1`` is rejected (fork/COW need the block pool).
 """
 
 from __future__ import annotations
@@ -67,6 +86,23 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.paged_cache import BlockAllocator
+
+
+@dataclasses.dataclass
+class SamplingGroup:
+    """One ``n_samples > 1`` request's fanout unit.
+
+    Created at :meth:`Scheduler.add`; ``fanned`` flips when the prompt's
+    last chunk completes and :meth:`Scheduler.fork_group` materializes
+    the siblings.  The request is done when ``finished == n`` (the
+    engine tracks that); ``siblings[i].output`` is the request's
+    ``outputs[i]``."""
+
+    req: Any
+    n: int
+    siblings: List["Sequence"] = dataclasses.field(default_factory=list)
+    fanned: bool = False
+    finished: int = 0
 
 
 @dataclasses.dataclass
@@ -86,6 +122,13 @@ class Sequence:
     block_hashes: List[int] = dataclasses.field(default_factory=list)
     registered: int = 0                      # full blocks already in the index
     n_preemptions: int = 0                   # starvation-bound counter
+    # generated tokens of THIS sequence (for a singleton / sampling-group
+    # sibling 0 this is the request's ``output`` list itself; other
+    # siblings own their entry of ``req.outputs``)
+    output: Optional[List[int]] = None
+    group: Optional[SamplingGroup] = None    # n_samples > 1 fanout unit
+    sibling_index: int = 0                   # 0 = parent / singleton
+    sample_key: Any = None                   # engine-lazy per-stream PRNG key
 
     @property
     def prefill_done(self) -> bool:
@@ -174,7 +217,15 @@ class Scheduler:
 
     # -- public API ------------------------------------------------------
     def add(self, req: Any) -> None:
-        self.waiting.append(Sequence(req=req))
+        if req.output is None:
+            req.output = []
+        # sibling 0's stream IS req.output, so singleton callers keep
+        # reading/mutating the list they always did
+        seq = Sequence(req=req, output=req.output)
+        n = getattr(req, "n_samples", 1)
+        if n > 1:
+            seq.group = SamplingGroup(req=req, n=n, siblings=[seq])
+        self.waiting.append(seq)
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
@@ -228,8 +279,7 @@ class Scheduler:
             budget -= self._plan_chunk(seq, budget, plan)
 
         # ---- admissions (FIFO; head-of-line blocks, preserving order) -
-        while (budget > 0 and self.waiting
-               and len(self.running) < self.max_slots):
+        while budget > 0 and self.waiting:
             seq = self.waiting[0]
             err = self._admission_error(seq)
             if err is not None:
@@ -237,6 +287,14 @@ class Scheduler:
                 seq.req.error = err
                 plan.rejected.append(seq.req)
                 continue
+            # an unfanned sampling group admits once but will need n
+            # slots at fanout — reserve its siblings' slots now so the
+            # fork can never find the slot table full
+            unfanned = seq.group is not None and not seq.group.fanned
+            need_slots = seq.group.n if unfanned else 1
+            if (len(self.running) + self._slots_reserved()
+                    + need_slots > self.max_slots):
+                break          # slots busy/reserved: defer, keep order
             # longest cached prefix of *full* blocks, capped so at least
             # one prompt token is re-prefilled (its logits seed sampling)
             bids: List[int] = []
@@ -253,9 +311,15 @@ class Scheduler:
                     k = min(len(bids), (len(seq.tokens) - 1) // bs)
                     bids, hashes = bids[:k], hashes[:k]
                     cached_len = k * bs
-                # headroom for NEW blocks after mapping the cached run
+                # headroom for NEW blocks after mapping the cached run;
+                # a group admission additionally prices the fanout's
+                # first divergent appends (fork_cost) so the siblings'
+                # COW blocks are there when the fork happens
+                extra = (self.pager.fork_cost(len(seq.tokens), seq.group.n)
+                         if unfanned else 0)
                 first = min(len(seq.tokens) - cached_len, budget,
-                            self.pager.reusable_free_count(bids) * bs)
+                            (self.pager.reusable_free_count(bids) - extra)
+                            * bs)
             else:
                 first = min(len(seq.tokens), budget)
             if first <= 0:
@@ -279,14 +343,64 @@ class Scheduler:
         # ---- deadlock guard: all running mid-prefill, no blocks, no
         # decodes -> evict a victim so the older prefill can proceed ----
         if not plan.has_work() and self.running:
-            self._preempt(self._select_victim(), plan)
+            self._preempt_unit(self._select_victim(), plan)
         return plan
 
+    def fork_group(self, seq: Sequence) -> List[Sequence]:
+        """Fan a just-prefilled sampling-group parent out into its
+        siblings; returns all ``n`` sequences (parent first).
+
+        Each sibling leases every block the parent holds
+        (``BlockAllocator.fork`` — prompt KV shared read-only, refcount
+        bumped) and starts fully prefilled at the parent's ``kv_len``;
+        the divergent tails un-share through COW on their first appends.
+        Slots were reserved at admission, so the fork cannot find the
+        slot table full.  The caller (engine) appends each sibling's
+        first sampled token and publishes the new page-table rows."""
+        group = seq.group
+        assert group is not None and not group.fanned and seq.prefill_done
+        assert self.pager is not None, "fork needs the paged pool"
+        free = sorted(set(range(self.max_slots)) - set(self.running))
+        assert len(free) >= group.n - 1, \
+            f"fanout of uid={seq.req.uid} found only {len(free)} free " \
+            f"slots for {group.n - 1} siblings (reservation broken)"
+        group.fanned = True
+        group.siblings = [seq]
+        for i in range(1, group.n):
+            slot = free[i - 1]
+            self.pager.fork(seq.slot, slot)
+            sib = Sequence(
+                req=seq.req, prompt=seq.prompt, tokens=seq.tokens,
+                slot=slot, prefilled=seq.prefilled, kv_len=seq.kv_len,
+                order=seq.order, cached_len=seq.cached_len,
+                block_hashes=list(seq.block_hashes),
+                registered=seq.registered,
+                n_preemptions=seq.n_preemptions,
+                output=[], group=group, sibling_index=i)
+            self.running[slot] = sib
+            group.siblings.append(sib)
+        return group.siblings
+
     # -- internals -------------------------------------------------------
+    def _slots_reserved(self) -> int:
+        """Slots promised to running-but-unfanned sampling groups."""
+        return sum(s.group.n - 1 for s in self.running.values()
+                   if s.group is not None and not s.group.fanned)
+
     def _admission_error(self, seq: Sequence) -> Optional[str]:
         """Validate (and on first admission, clamp) a sequence; returns an
         error string to reject with, or None."""
         req = seq.req
+        n_samples = getattr(req, "n_samples", 1)
+        if n_samples < 1:
+            return f"n_samples={n_samples} must be >= 1"
+        if seq.group is not None and not seq.group.fanned:
+            if self.pager is None:
+                return ("n_samples > 1 requires the paged KV cache "
+                        "(fork/copy-on-write)")
+            if seq.group.n > self.max_slots:
+                return (f"n_samples={seq.group.n} exceeds "
+                        f"max_slots={self.max_slots}")
         if seq.tokens is None:
             keep = self.max_seq - req.max_new_tokens
             if req.max_new_tokens < 1:
@@ -306,6 +420,8 @@ class Scheduler:
             seq.tokens = prompt
         if self.pager is not None:
             need = self.pager.blocks_needed(len(seq.tokens))
+            if seq.group is not None and not seq.group.fanned:
+                need += self.pager.fork_cost(len(seq.tokens), seq.group.n)
             if need > self.pager.cfg.n_blocks:
                 return (f"sequence needs {need} blocks, pool holds only "
                         f"{self.pager.cfg.n_blocks}")
@@ -321,7 +437,9 @@ class Scheduler:
         keeps its slot and eventually finishes."""
         cands = list(self.running.values())
         fair = [s for s in cands if s.n_preemptions < self.preempt_limit]
-        return max(fair or cands, key=lambda s: s.order)
+        # sampling-group siblings share the parent's admission order;
+        # the sibling_index tie-break keeps victim choice deterministic
+        return max(fair or cands, key=lambda s: (s.order, s.sibling_index))
 
     def _grow_for_decode(self, seq: Sequence, plan: StepPlan) -> bool:
         """Make room for one more KV row; True iff ``seq`` may decode.
@@ -329,10 +447,16 @@ class Scheduler:
         The append may need a grown block *and* a copy-on-write block
         (when the write position lands in a shared tail —
         ``BlockAllocator.append_cost`` prices both).  Preempts victims
-        (``_select_victim``) until the growth fits.  If ``seq`` itself is
-        selected, it is preempted (recompute-on-resume) — unless even an
-        empty pool could not hold it, in which case it fails with
-        ``.error`` (it could never complete)."""
+        (``_select_victim``) until the growth fits.  A victim belonging
+        to a *different* fanned sampling group takes its whole group
+        with it (unit preemption — all of the group's planned decodes
+        and COW pairs retract this same step); a victim in ``seq``'s OWN
+        group is shed alone, so intra-group contention drains one
+        sibling at a time instead of the grower evicting itself.  If
+        ``seq`` itself is selected, it is preempted
+        (recompute-on-resume) — unless even an empty pool could not hold
+        it, in which case it fails with ``.error`` (it could never
+        complete)."""
         if self.pager is None:
             return True
         while (self.pager.append_cost(seq.slot, seq.kv_len)
@@ -341,18 +465,35 @@ class Scheduler:
             if victim is seq:
                 whole_pool = self.pager.cfg.n_blocks
                 if self.pager.blocks_needed(seq.kv_len + 1) > whole_pool:
-                    self.running.pop(seq.slot)
-                    self.pager.release(seq.slot)
                     seq.req.error = (
                         f"sequence grew to {seq.kv_len + 1} tokens "
                         f"({self.pager.blocks_needed(seq.kv_len + 1)} "
                         f"blocks) — more than the whole "
                         f"{whole_pool}-block pool")
+                    # a group fails as a unit: one sibling that can never
+                    # fit dooms the request, so tear every sibling down
+                    # (running and requeued alike) instead of leaving the
+                    # rest racing a request already rejected
+                    doomed = ([seq] if seq.group is None
+                              else seq.group.siblings)
+                    for s in doomed:
+                        if self.running.get(s.slot) is s:
+                            self._retract_planned(s, plan)
+                            self.running.pop(s.slot)
+                            self.pager.release(s.slot)
+                    if seq.group is not None:
+                        self.waiting = deque(
+                            s for s in self.waiting
+                            if s.group is not seq.group)
                     plan.rejected.append(seq.req)
                     return False
                 self._preempt(seq, plan)
                 return False
-            self._preempt(victim, plan)
+            if (victim.group is not None and victim.group.fanned
+                    and victim.group is seq.group):
+                self._preempt(victim, plan)      # shed ONE own sibling
+            else:
+                self._preempt_unit(victim, plan)
         cow = self.pager.cow_for_append(seq.slot, seq.kv_len)
         if cow is not None:
             plan.cows.append(cow)
@@ -381,6 +522,42 @@ class Scheduler:
         seq.kv_len = end
         return end - start
 
+    def _retract_planned(self, seq: Sequence, plan: StepPlan) -> None:
+        """Strip everything already planned this step for a sequence
+        about to leave ``running``.  A COW planned for it maps a dst
+        block that release() is about to free (and that may be re-leased
+        within this very plan) — retract it so the engine never copies
+        into a reassigned block (the dst is ref-1 exclusive, so lease
+        membership identifies the pairs).  Likewise its planned decode:
+        the starvation bound (or a group unit-preemption) can evict a
+        sequence whose decode was already planned."""
+        if self.pager is not None and plan.cows:
+            mine = set(self.pager.owned[seq.slot])
+            plan.cows[:] = [p for p in plan.cows if p[1] not in mine]
+        if seq.slot in plan.decodes:
+            i = plan.decodes.index(seq.slot)
+            plan.decodes.pop(i)
+            plan.decode_uids.pop(i)
+
+    def _preempt_unit(self, seq: Sequence, plan: StepPlan) -> None:
+        """Preempt ``seq`` — and, when it belongs to a fanned sampling
+        group, every running sibling with it in the same step.  All of
+        the group's planned decodes and COW pairs retract together (per
+        sibling, in :meth:`_preempt`), so the engine never executes a
+        decode or device copy for a half-evicted group.  Siblings are
+        requeued lowest-index-first at the waiting front and resume as
+        ordinary sequences whose prompt blocks remap from the prefix
+        index."""
+        group = seq.group
+        if group is None or not group.fanned:
+            self._preempt(seq, plan)
+            return
+        members = [s for s in group.siblings
+                   if self.running.get(s.slot) is s]
+        for s in sorted(members, key=lambda s: s.sibling_index,
+                        reverse=True):         # appendleft: sib 0 ends front
+            self._preempt(s, plan)
+
     def _preempt(self, seq: Sequence, plan: StepPlan) -> None:
         """Evict ``seq``: leases dropped (registered blocks stay cached
         at zero refs), request requeued at the front of ``waiting`` with
@@ -390,27 +567,12 @@ class Scheduler:
         are remapped rather than recomputed; the final sampled token has
         no KV yet and is re-fed as the next decode input (``resuming``
         suppresses the duplicate first-token sample)."""
+        self._retract_planned(seq, plan)
         if self.pager is not None:
-            if plan.cows:
-                # a COW planned for this victim earlier in the step maps
-                # a dst block that release() is about to free (and that
-                # may be re-leased within this very plan) — retract it so
-                # the engine never copies into a reassigned block.  The
-                # dst is ref-1 exclusive, so lease membership identifies
-                # the victim's pairs.
-                mine = set(self.pager.owned[seq.slot])
-                plan.cows[:] = [p for p in plan.cows if p[1] not in mine]
             self.pager.release(seq.slot)
         self.running.pop(seq.slot)
-        if seq.slot in plan.decodes:
-            # the starvation bound can pick a victim whose decode was
-            # already planned this step (an older sequence, when the
-            # newer ones are exempt) — retract it so the engine never
-            # executes a decode for an evicted slot.
-            i = plan.decodes.index(seq.slot)
-            plan.decodes.pop(i)
-            plan.decode_uids.pop(i)
-        out = list(seq.req.output or [])
+        out = list(seq.output if seq.output is not None
+                   else (seq.req.output or []))
         if out:
             seq.tokens = np.concatenate(
                 [seq.prompt, np.asarray(out[:-1], np.int32)])

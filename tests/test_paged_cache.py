@@ -143,6 +143,26 @@ class TestRefcountCow:
         assert a.append_cost(0, 6) == 1       # COW of the shared tail
         assert a.append_cost(0, 8) == 1       # new block, no COW
 
+    def test_fork_cost_prices_fanout(self):
+        """fork_cost = fresh blocks the first divergent appends need:
+        n-1 COW copies for a shared partial tail (the last writer keeps
+        the original), n new blocks when the tail is full/registered."""
+        a = BlockAllocator(_cfg())            # block_size 4
+        assert a.fork_cost(6, 1) == 0
+        assert a.fork_cost(6, 3) == 2         # partial tail: n-1 COWs
+        assert a.fork_cost(8, 3) == 3         # aligned: n fresh blocks
+        assert a.fork_cost(8, 1) == 0
+        # matches what the machinery actually allocates: fork 3 ways at
+        # a partial tail, then make each sibling's tail writable
+        a.ensure(0, 6)
+        a.fork(0, 1)
+        a.fork(0, 2)
+        used0 = a.cfg.n_blocks - a.n_free()
+        for slot in (0, 1, 2):
+            a.copy_on_write(slot, 1)
+        assert (a.cfg.n_blocks - a.n_free()) - used0 == a.fork_cost(6, 3)
+        a.debug_check()
+
     def test_hash_collision_degrades_to_miss(self):
         """lookup_prefix verifies the stored token ids, so a chain_hash
         collision (engineered here by registering other tokens under the

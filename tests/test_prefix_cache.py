@@ -186,11 +186,12 @@ def test_divergent_mid_block_prompts_match_isolated_runs():
 
 
 def test_fork_cow_preserves_original_stream():
-    """Emulate n=2 parallel sampling: after the original has a partial
-    tail block, fork its leases into a second slot whose request diverges
-    at the last sampled token.  The next decode step must COW the shared
-    tail (plan.cows -> device copy), and the original's greedy stream
-    must be bit-identical to an unforked run."""
+    """Emulate n=2 parallel sampling by hand (below the ``n_samples``
+    API): after the original has a partial tail block, fork its leases
+    into a second slot whose request diverges at the last sampled token.
+    The next decode step must COW the shared tail (plan.cows -> device
+    copy), and the original's greedy stream must be bit-identical to an
+    unforked run."""
     m, params = _f32_model()
     rng = np.random.default_rng(4)
     prompt = rng.integers(4, 500, size=10).astype(np.int32)
@@ -207,14 +208,15 @@ def test_fork_cow_preserves_original_stream():
 
     slot_b = 1 - slot_a
     eng.pager.fork(slot_a, slot_b)
-    div = int((seq_a.req.output[-1] + 7) % 400 + 4)
+    div = int((seq_a.output[-1] + 7) % 400 + 4)
     req_b = Request(uid=999, prompt=np.asarray(prompt), max_new_tokens=8,
-                    temperature=0.0, output=seq_a.req.output[:-1] + [div])
+                    temperature=0.0, output=seq_a.output[:-1] + [div],
+                    rng_key=jax.random.PRNGKey(0))
     seq_b = Sequence(req=req_b, prompt=seq_a.prompt, tokens=seq_a.tokens,
                      slot=slot_b, prefilled=seq_a.prefilled,
                      kv_len=seq_a.kv_len, order=eng.scheduler._order,
                      block_hashes=list(seq_a.block_hashes),
-                     registered=seq_a.registered)
+                     registered=seq_a.registered, output=req_b.output)
     eng.scheduler._order += 1
     eng.scheduler.running[slot_b] = seq_b
     # the engine syncs device lens from scheduler state after each decode;
@@ -303,6 +305,76 @@ def test_preempted_victim_cow_pairs_retracted():
     assert plan.cows == [], "victim's planned COW must be retracted"
     assert pager.stats["cow_copies"] == 1    # allocator did copy-remap
     pager.debug_check()
+
+
+# ---------------------------------------------------------------------------
+# parallel sampling (n_samples) over fork/COW — cold/warm methodology
+# extended from the prefix tests above to sampling groups
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("build", [_f32_model, _int8_model],
+                         ids=["f32", "int8"])
+def test_sampling_group_siblings_bit_identical_to_reruns(build):
+    """The fanout bit-exactness bar: sibling ``i`` of an (seed=s,
+    n_samples=n) request streams the identical tokens to an independent
+    (seed=s, stream=i, n_samples=1) request served alone on a fresh
+    engine — the forked prompt KV, the COW'd tails, and the per-stream
+    PRNG must all be invisible to the sampled output (f32 and int8
+    pools).  The group also prefills its prompt exactly once."""
+    m, params = build()
+    rng = np.random.default_rng(10)
+    prompt = rng.integers(4, 500, size=13).astype(np.int32)
+
+    eng = _engine(m, params, max_slots=4, prefill_chunk_tokens=16)
+    ug = eng.submit(prompt, max_new_tokens=7, temperature=1.0, top_p=0.9,
+                    seed=11, n_samples=3)
+    (r,) = eng.run()
+    assert r.error is None and len(r.outputs) == 3
+    assert all(len(o) == 7 for o in r.outputs)
+    assert r.output is r.outputs[0]
+    eng.pager.debug_check()
+    assert eng.pager.utilization() == 0.0, "drained group must release all"
+
+    # one prompt prefill: the group's chunks cover [0, len) exactly once
+    assert _chunks_of(eng, ug) == [(0, 13)]
+    assert eng.metrics["fanouts"] == 1
+
+    for i in range(3):
+        solo = _engine(m, params, max_slots=4, prefill_chunk_tokens=16)
+        solo.submit(prompt, max_new_tokens=7, temperature=1.0, top_p=0.9,
+                    seed=11, stream=i)
+        (ri,) = solo.run()
+        assert ri.output == r.outputs[i], \
+            f"sibling {i} diverged from its independent rerun"
+
+
+def test_warm_sampling_group_fanout_bit_identical():
+    """Cold then warm serve of the same n_samples=3 request: the warm
+    admission maps the prompt's cached full blocks read-only, fans out
+    on top of them (fork ref++ over already-shared cached blocks), and
+    every sibling's stream matches the cold run bit for bit while the
+    shared prefix executes zero prefill tokens."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(4, 500, size=24).astype(np.int32)
+    eng = _engine(m, params, max_slots=4, prefill_chunk_tokens=16)
+
+    ua = eng.submit(prompt, max_new_tokens=6, temperature=1.0, seed=21,
+                    n_samples=3)
+    (a,) = eng.run()
+    ub = eng.submit(prompt, max_new_tokens=6, temperature=1.0, seed=21,
+                    n_samples=3)
+    (b,) = eng.run()
+
+    assert a.error is None and b.error is None
+    assert a.outputs == b.outputs, \
+        "warm group fanout must be bit-identical to the cold one"
+    assert _chunks_of(eng, ua) == [(0, 16), (16, 24)]
+    assert _cached_of(eng, ub) == [16]
+    assert _chunks_of(eng, ub) == [(16, 24)], \
+        "warm group must execute zero prefill tokens for the prefix"
+    eng.pager.debug_check()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,192 @@
+"""Parallel sampling (``Request.n_samples``) API contract.
+
+The fork/COW mechanics live in tests/test_prefix_cache.py (bit-exact
+sibling reruns, warm-group fanout) and tests/test_scheduler.py (unit
+preemption, slot reservation); this file pins the request-level
+contract:
+
+  * ``n_samples=1`` is a strict no-op of the PR: greedy streams are
+    identical to the dense (pre-paging) engine for f32 AND int8 pools,
+    and ``outputs == [output]``;
+  * a fanned group's pool footprint stays within
+    ``prompt_blocks + n * tail_blocks`` — the acceptance bound that
+    proves prompt KV is shared rather than copied per sibling;
+  * per-request ``stop_tokens`` are honored in the decode finish check,
+    so siblings of one group can retire on different ids;
+  * group requests that can never run (wider than the slot table, dense
+    cache, ``n_samples < 1``) come back with ``.error``.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.engine import Engine
+
+
+def _f32_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(compute_dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _int8_model():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(
+        compute_dtype="float32", kv_cache_dtype="int8")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("build", [_f32_model, _int8_model],
+                         ids=["f32", "int8"])
+def test_n_samples_one_greedy_identical_to_dense_engine(build):
+    """The n=1 regression bar: the paged engine (per-row keyed sampling,
+    group plumbing) must emit the exact greedy streams of the dense
+    engine, whose decode path predates all of it."""
+    m, params = build()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in (6, 11, 9)]
+
+    def serve(kind):
+        eng = Engine(m, params, max_slots=4, max_seq=64, page_size=8,
+                     cache_kind=kind)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8, temperature=0.0, n_samples=1)
+        done = sorted(eng.run(), key=lambda r: r.uid)
+        assert all(r.error is None for r in done)
+        return done
+
+    paged = serve("paged")
+    dense = serve("dense")
+    assert [r.output for r in paged] == [r.output for r in dense]
+    for r in paged:
+        assert r.outputs == [r.output] and r.outputs[0] is r.output
+
+
+def test_group_allocates_at_most_prompt_plus_n_tails():
+    """The fork-sharing acceptance bound: an n_samples=4 request over a
+    multi-block prompt never holds more than ``prompt_blocks + 4 *
+    tail_blocks`` live leases — the prompt's full blocks back all four
+    page tables instead of being copied per sibling."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(1)
+    plen, max_new, bs, n = 19, 8, 8, 4
+    prompt = rng.integers(4, 500, size=plen).astype(np.int32)
+
+    eng = Engine(m, params, max_slots=4, max_seq=64, page_size=bs)
+    eng.submit(prompt, max_new_tokens=max_new, temperature=1.0, seed=5,
+               n_samples=n)
+    (r,) = eng.run()
+    assert r.error is None and len(r.outputs) == n
+
+    prompt_blocks = plen // bs                       # shared full blocks
+    seq_blocks = -(-(plen + max_new) // bs)          # one sibling's worst
+    tail_blocks = seq_blocks - prompt_blocks
+    bound = prompt_blocks + n * tail_blocks
+    naive = n * seq_blocks
+    peak = eng.metrics["blocks_live_peak"]
+    assert peak <= bound, f"peak {peak} blocks exceeds shared bound {bound}"
+    assert peak < naive, "fork sharing must beat per-sibling copies"
+    assert eng.metrics["blocks_saved_by_sharing_peak"] >= \
+        (n - 1) * prompt_blocks
+    eng.pager.debug_check()
+    assert eng.pager.utilization() == 0.0
+
+
+def test_stop_tokens_per_sibling():
+    """Per-request stop ids end a sequence like eos does — and within a
+    sampling group each sibling stops independently on its own id."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(4, 500, size=10).astype(np.int32)
+
+    # reference run: no stop ids
+    eng = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng.submit(prompt, max_new_tokens=8, temperature=1.0, seed=13,
+               n_samples=3)
+    (ref,) = eng.run()
+    assert all(len(o) == 8 for o in ref.outputs)
+
+    # stop on a token that appears mid-stream in exactly one sibling
+    target, pos = None, None
+    for i, out in enumerate(ref.outputs):
+        for j, tok in enumerate(out[1:-1], start=1):
+            others = [o for k, o in enumerate(ref.outputs) if k != i]
+            if all(tok not in o[:j + 1] for o in others):
+                target, pos, sib = tok, j, i
+                break
+        if target is not None:
+            break
+    assert target is not None, "seeded streams must provide a stop token"
+
+    eng2 = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng2.submit(prompt, max_new_tokens=8, temperature=1.0, seed=13,
+                n_samples=3, stop_tokens=[int(target)])
+    (r,) = eng2.run()
+    assert r.outputs[sib] == ref.outputs[sib][:pos + 1], \
+        "the matching sibling must stop right after its stop id"
+    for k in range(3):
+        if k != sib:
+            assert r.outputs[k] == ref.outputs[k][:len(r.outputs[k])]
+            assert len(r.outputs[k]) >= pos + 1
+
+    # singleton requests honor stop_tokens too
+    eng3 = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng3.submit(prompt, max_new_tokens=8, temperature=1.0, seed=13,
+                stream=sib, stop_tokens=[int(target)])
+    (solo,) = eng3.run()
+    assert solo.output == ref.outputs[sib][:pos + 1]
+
+
+def test_first_token_stop_and_max_new_tokens_one():
+    """The finish predicate applies to the FIRST sampled token too: a
+    stop id drawn at prefill/fanout retires the sibling before any
+    decode, and ``max_new_tokens=1`` yields exactly one token."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(4, 500, size=9).astype(np.int32)
+
+    eng = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng.submit(prompt, max_new_tokens=1, temperature=1.0, seed=4,
+               n_samples=3)
+    eng.submit(prompt, max_new_tokens=1, temperature=0.0)
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert [len(o) for o in done[0].outputs] == [1, 1, 1]
+    assert len(done[1].output) == 1
+    eng.pager.debug_check()
+    assert eng.pager.utilization() == 0.0
+
+    # reference streams, then stop on sibling 1's very first token
+    eng2 = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng2.submit(prompt, max_new_tokens=6, temperature=1.0, seed=4,
+                n_samples=3)
+    (ref,) = eng2.run()
+    tok0 = int(ref.outputs[1][0])
+    eng3 = Engine(m, params, max_slots=4, max_seq=64, page_size=8)
+    eng3.submit(prompt, max_new_tokens=6, temperature=1.0, seed=4,
+                n_samples=3, stop_tokens=[tok0])
+    (r,) = eng3.run()
+    assert r.outputs[1] == [tok0], \
+        "a first-token stop id must retire the sibling before any decode"
+
+
+def test_group_request_errors():
+    m, params = _f32_model()
+    eng = Engine(m, params, max_slots=2, max_seq=64, page_size=8)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(4, 500, size=6).astype(np.int32)
+    eng.submit(prompt, max_new_tokens=4, n_samples=3)      # > max_slots
+    eng.submit(prompt, max_new_tokens=4, n_samples=0)
+    done = sorted(eng.run(), key=lambda r: r.uid)
+    assert "max_slots" in done[0].error
+    assert "n_samples" in done[1].error
+
+    dense = Engine(m, params, max_slots=4, max_seq=64, cache_kind="dense")
+    dense.submit(prompt, max_new_tokens=4, n_samples=2)
+    (r,) = dense.run()
+    assert r.error is not None and "paged" in r.error

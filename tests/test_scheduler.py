@@ -434,3 +434,194 @@ def test_can_allocate_matches_ensure():
     assert not pager.can_allocate(1, 4)
     pager.release(0)
     assert pager.can_allocate(1, 8)
+
+
+# ---------------------------------------------------------------------------
+# sampling groups: unit preemption, slot reservation, admission pricing
+# ---------------------------------------------------------------------------
+
+
+def test_group_preempted_mid_decode_resumes_via_prefix_remap():
+    """End-to-end: a sampling group squeezed off an oversubscribed pool
+    mid-decode is preempted and later resumed — the resume admissions
+    remap the still-cached shared prompt blocks (plan ``cached`` entries:
+    a hit, not a recompute) and every sibling's stream is bit-identical
+    to the uncontended run."""
+    m, params = _f32_model()
+    rng = np.random.default_rng(9)
+    gp = rng.integers(4, 500, size=12).astype(np.int32)
+    sp = rng.integers(4, 500, size=10).astype(np.int32)
+
+    def serve(n_pages):
+        eng = _engine(m, params, max_slots=6, n_pages=n_pages)
+        us = eng.submit(sp, max_new_tokens=10, temperature=0.0)
+        ug = eng.submit(gp, max_new_tokens=10, temperature=1.0, seed=3,
+                        n_samples=3)
+        done = {r.uid: r for r in eng.run()}
+        assert all(r.error is None for r in done.values())
+        return done[ug].outputs, done[us].output, ug, eng
+
+    free_out, free_s, _, eng_free = serve(None)
+    assert eng_free.metrics["preemptions"] == 0
+    tight_out, tight_s, ug, eng = serve(7)
+    assert eng.metrics["preemptions"] > 0, "7/16 blocks must preempt"
+    preempt_step = next(i for i, p in enumerate(eng.plan_log)
+                        if ug in p["preempted"])
+    remaps = [cl for p in eng.plan_log[preempt_step:]
+              for (u, cl) in p["cached"] if u == ug]
+    assert remaps and all(cl >= 8 for cl in remaps), \
+        "resumed siblings must remap the cached prompt block, not recompute"
+    assert tight_out == free_out, \
+        "preempt/resume must not change any sibling's stream"
+    assert tight_s == free_s
+    eng.pager.debug_check()
+    assert eng.pager.utilization() == 0.0
+
+
+def _fanned_group(pager, uid, n, plen=6, order=0, slot0=0):
+    """Build a running, fanned n-sibling group sharing ``plen`` tokens of
+    leased blocks (partial tail when plen % block_size != 0)."""
+    from repro.serving.engine import Request
+    from repro.serving.scheduler import SamplingGroup
+    req = Request(uid=uid, prompt=np.arange(plen, dtype=np.int32),
+                  max_new_tokens=20, output=[5], n_samples=n)
+    group = SamplingGroup(req=req, n=n, fanned=True)
+    pager.ensure(slot0, plen)
+    sibs = []
+    for i in range(n):
+        slot = slot0 + i
+        if i:
+            pager.fork(slot0, slot)
+        sibs.append(Sequence(
+            req=req, prompt=req.prompt, tokens=req.prompt, slot=slot,
+            prefilled=plen, kv_len=plen, order=order,
+            output=req.output if i == 0 else [5 + i],
+            group=group, sibling_index=i))
+    group.siblings = sibs
+    return group, sibs
+
+
+def test_external_growth_preempts_group_as_unit():
+    """An exempt non-group sequence growing into an exhausted pool
+    victimizes a fanned group: EVERY sibling is preempted in the same
+    step, and the siblings' already-planned decodes AND COW pairs are
+    all retracted — the engine never executes work for a half-evicted
+    group."""
+    pager = _pager(5, bs=4, slots=3, mb=8)
+    sched = Scheduler(3, 64, pager, prefill_chunk_tokens=64,
+                      preempt_limit=2)
+    group, (a, b) = _fanned_group(pager, uid=1, n=2, plen=6)
+    grower = Sequence(req=_req(2, 8, max_new=20),
+                      prompt=np.arange(8, dtype=np.int32),
+                      tokens=np.arange(8, dtype=np.int32), slot=2,
+                      prefilled=8, kv_len=8, order=1, n_preemptions=2,
+                      output=[9])
+    grower.req.output = grower.output
+    pager.ensure(2, 8)
+    sched.running = {0: a, 1: b, 2: grower}
+    sched._order = 2
+
+    plan = sched.schedule()
+    # group (order 0) planned first: sibling A COW'd the shared tail
+    # (consuming the last free block) and both siblings planned decodes;
+    # then the exempt grower's growth found the pool dry and victimized
+    # the group — as a unit, with its planned work retracted
+    assert plan.preempted == [1, 1], "both siblings evict in one step"
+    assert plan.decodes == [2] and plan.decode_uids == [2]
+    assert plan.cows == [], "the evicted group's COW must be retracted"
+    assert pager.stats["cow_copies"] == 1   # allocator did copy-remap
+    # both siblings were requeued at the front (sibling 0 first); with
+    # the group's blocks freed, sibling 0 was immediately re-admitted
+    # for recompute-on-resume in this same plan and sibling 1 waits
+    resumed = [c for c in plan.prefills if c.seq.req.uid == 1]
+    assert resumed and resumed[0].seq.sibling_index == 0
+    assert resumed[0].seq.resuming
+    assert [s.sibling_index for s in sched.waiting] == [1]
+    pager.debug_check()
+
+
+def test_intra_group_contention_sheds_one_sibling():
+    """When a sibling's own growth finds the pool dry and the victim is
+    a sequence of the SAME group, only that sibling is shed — the grower
+    keeps its slot and decodes, so a group can drain itself down to a
+    servable width instead of self-evicting forever."""
+    pager = _pager(3, bs=4, slots=2, mb=8)
+    sched = Scheduler(2, 64, pager, prefill_chunk_tokens=64)
+    group, (a, b) = _fanned_group(pager, uid=1, n=2, plen=8)
+    sched.running = {0: a, 1: b}
+    sched._order = 1
+
+    # sibling 0's growth takes the last free block; sibling 1's growth
+    # then finds the pool dry and the victim tie-break lands on itself
+    plan = sched.schedule()
+    assert plan.preempted == [1], "exactly one sibling shed"
+    assert plan.decodes == [0], "the surviving sibling still decodes"
+    assert sched.running[0] is a and a.group is group
+    assert len(sched.waiting) == 1 and sched.waiting[0] is b
+    assert b.resuming, "the shed sibling resumes with its tokens intact"
+    pager.debug_check()
+
+
+def test_group_admission_reserves_sibling_slots():
+    """An unfanned group parent counts n slots against admission: a
+    follow-up request defers while the group's siblings are reserved,
+    instead of stealing a slot the fanout was promised."""
+    from repro.serving.engine import Request
+    pager = _pager(16, bs=4, slots=3, mb=8)
+    sched = Scheduler(3, 64, pager, prefill_chunk_tokens=64)
+    g = Request(uid=1, prompt=np.arange(6, dtype=np.int32),
+                max_new_tokens=4, output=[], n_samples=3)
+    sched.add(g)
+    sched.add(_req(2, 6))
+    plan = sched.schedule()
+    assert [(c.seq.req.uid) for c in plan.prefills] == [1], \
+        "the group's 2 reserved sibling slots leave no room for uid 2"
+    assert sched.waiting and sched.waiting[0].req.uid == 2
+    # fanout consumes the reservation; uid 2 still has to wait
+    parent = sched.running[0]
+    parent.output = g.output
+    sibs = sched.fork_group(parent)
+    assert len(sibs) == 3 and len(sched.running) == 3
+    for i, s in enumerate(sibs):
+        assert s.sibling_index == i and s.kv_len == parent.kv_len
+    pager.debug_check()
+    plan = sched.schedule()
+    assert not plan.prefills and sched.waiting[0].req.uid == 2
+    # a finished sibling frees a real slot: uid 2 admits
+    sched.finish(sibs[2].slot)
+    plan = sched.schedule()
+    assert [(c.seq.req.uid) for c in plan.prefills] == [2]
+
+
+def test_group_admission_rejections():
+    """n_samples that can never run fail fast with .error: wider than
+    the slot table, n_samples < 1, on the dense fallback (no fork), or a
+    prompt + fork_cost that exceeds the whole pool."""
+    from repro.serving.engine import Request
+
+    def group_req(uid, n, plen=6):
+        return Request(uid=uid, prompt=np.arange(plen, dtype=np.int32),
+                       max_new_tokens=4, output=[], n_samples=n)
+
+    sched = Scheduler(2, 64, _pager(16, slots=2), prefill_chunk_tokens=64)
+    sched.add(group_req(1, 3))
+    plan = sched.schedule()
+    assert plan.rejected and "max_slots" in plan.rejected[0].error
+
+    sched = Scheduler(2, 64, _pager(16, slots=2), prefill_chunk_tokens=64)
+    sched.add(group_req(2, 0))
+    plan = sched.schedule()
+    assert plan.rejected and "n_samples" in plan.rejected[0].error
+
+    dense = Scheduler(4, 64, None, prefill_chunk_tokens=64)
+    dense.add(group_req(3, 2))
+    plan = dense.schedule()
+    assert plan.rejected and "paged" in plan.rejected[0].error
+
+    # 6-token prompt = 2 blocks, + 1 COW for the extra sibling's first
+    # divergent token: 3 > the 2-block pool
+    tight = Scheduler(2, 64, _pager(2, slots=2, mb=8),
+                      prefill_chunk_tokens=64)
+    tight.add(group_req(4, 2))
+    plan = tight.schedule()
+    assert plan.rejected and "blocks" in plan.rejected[0].error
