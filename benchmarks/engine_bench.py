@@ -20,7 +20,13 @@ exercise the scheduler subsystem end to end:
     against the ``prompt + n*tail`` sharing bound, blocks saved by fork
     sharing (CI fails at zero), decode tok/s, and verifies each sibling
     of the probe request is bit-identical to an independent
-    (seed, stream=i) rerun.
+    (seed, stream=i) rerun,
+  * **shape_churn** — a stream of prompts whose lengths all differ,
+    deliberately churning the ``(B, chunk_len, pos_offset)`` triples
+    the pre-shape-stable engine compiled per: reports the XLA compile
+    count of the chunk step (must stay at ``compile_bound`` = one per
+    pool key — CI fails above it), the legacy shape-key count it
+    *would* have compiled, and TTFT p50/p99 for the churny traffic.
 
 Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
 artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
@@ -56,6 +62,12 @@ PS_REQUESTS = 3
 PS_N_SAMPLES = 4
 PS_PROMPT_LEN = 48           # 3 full blocks of 16, shared by all siblings
 PS_MAX_NEW = 16              # each sibling's divergent tail: 1 block
+
+# shape-churn workload: every prompt length distinct, spanning several
+# chunk counts under a 48-token budget -> maximal (B, len, off) churn
+SC_PROMPT_LENS = (5, 23, 41, 7, 66, 14, 90, 31, 11, 53, 77, 19)
+SC_CHUNK_TOKENS = 48
+SC_COMPILE_BOUND = 1         # executables per pool key (docs/BENCHMARKS.md)
 
 
 def _build_model():
@@ -249,6 +261,63 @@ def run_parallel_sampling(model, params, quiet: bool = False) -> dict:
     return result
 
 
+def run_shape_churn(model, params, quiet: bool = False,
+                    max_new_tokens: int = 4) -> dict:
+    """Serve SC_PROMPT_LENS prompts — every length distinct — and report
+    what shape-stable chunked prefill bought: the chunk step's XLA
+    compile count (bounded at SC_COMPILE_BOUND per pool key; CI fails
+    above it) against the legacy ``(B, chunk_len, pos_offset)`` key
+    count this traffic would have compiled, plus TTFT percentiles.
+
+    The compile count spans the COLD pass (that is where compilation
+    happens); TTFT is measured on a second, warm pass so the percentiles
+    track steady-state prefill latency rather than the one-time compile
+    the cold pass exists to bound."""
+    from repro.serving.engine import Engine, legacy_chunk_shape_keys
+
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in SC_PROMPT_LENS]
+    eng = Engine(model, params, max_slots=4, max_seq=128, page_size=16,
+                 prefill_chunk_tokens=SC_CHUNK_TOKENS,
+                 prefix_caching=False)
+    compiles0 = eng.prefill_compile_count()
+    for p in prompts:                      # cold pass: compiles count
+        eng.submit(p, max_new_tokens=max_new_tokens, temperature=0.0)
+    assert all(r.error is None for r in eng.run())
+    compiles = eng.prefill_compile_count() - compiles0
+
+    uids = [eng.submit(p, max_new_tokens=max_new_tokens, temperature=0.0)
+            for p in prompts]              # warm pass: TTFT percentiles
+    done = {r.uid: r for r in eng.run()}
+    assert all(done[u].error is None for u in uids)
+    ttft = np.array([done[u].t_first_token - done[u].t_enqueue
+                     for u in uids]) * 1e3
+
+    legacy = legacy_chunk_shape_keys(eng.plan_log)
+
+    result = {
+        "requests": len(prompts),
+        "prompt_lens": list(SC_PROMPT_LENS),
+        "prefill_chunk_tokens": SC_CHUNK_TOKENS,
+        "prefill_compiles": compiles,
+        "compile_bound": SC_COMPILE_BOUND,
+        "legacy_shape_keys": len(legacy),
+        "prefill_chunks": eng.metrics["prefill_chunks"],
+        "chunk_batch_calls": eng.metrics["chunk_batch_calls"],
+        "ttft_ms_p50": float(np.percentile(ttft, 50)),
+        "ttft_ms_p99": float(np.percentile(ttft, 99)),
+    }
+    if not quiet:
+        print(f"enginebench/shape_churn_compiles,{compiles},executables"
+              f" (bound {SC_COMPILE_BOUND}; legacy keying would have"
+              f" compiled {result['legacy_shape_keys']})")
+        print(f"enginebench/shape_churn_ttft_ms_p50,"
+              f"{result['ttft_ms_p50']:.1f},ms"
+              f" (p99 {result['ttft_ms_p99']:.1f})")
+    return result
+
+
 def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         max_new_tokens: int = 16) -> dict:
     from repro.serving.engine import Engine
@@ -292,6 +361,7 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     result["shared_prefix"] = run_shared_prefix(model, params, quiet=quiet)
     result["parallel_sampling"] = run_parallel_sampling(model, params,
                                                         quiet=quiet)
+    result["shape_churn"] = run_shape_churn(model, params, quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:

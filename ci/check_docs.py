@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Docs gate for ci/run_ci.sh: every internal link in README.md and
+docs/*.md must resolve, and every fenced ``python`` block in README.md
+must parse — with its import lines actually importable (PYTHONPATH=src)
+— so the quickstart can never silently rot as modules move.
+
+Checked:
+  * markdown links ``[text](target)`` whose target is not an absolute
+    URL / mailto / pure fragment: the referenced file must exist
+    relative to the linking document (fragments are stripped; a
+    ``#anchor`` on an existing file passes — anchor text churn is not a
+    CI concern, dead files are);
+  * fenced code blocks tagged ``python``: ``compile()`` the block, then
+    execute just its top-level ``import``/``from`` lines to prove the
+    named modules exist in this checkout.
+
+Exit 0 on success; nonzero with a per-problem listing otherwise.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"```python\n(.*?)```", re.S)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files():
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check_links(path: pathlib.Path, problems: list) -> int:
+    n = 0
+    for target in LINK.findall(path.read_text()):
+        if target.startswith(EXTERNAL) or target.startswith("#"):
+            continue
+        n += 1
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = (path.parent / rel).resolve()
+        if not resolved.exists():
+            problems.append(f"{path.relative_to(ROOT)}: dead link -> "
+                            f"{target}")
+    return n
+
+
+def check_snippets(path: pathlib.Path, problems: list) -> int:
+    n = 0
+    for block in FENCE.findall(path.read_text()):
+        n += 1
+        try:
+            compile(block, f"{path.name}:snippet{n}", "exec")
+        except SyntaxError as e:
+            problems.append(f"{path.relative_to(ROOT)} snippet {n}: "
+                            f"does not parse: {e}")
+            continue
+        imports = "\n".join(
+            ln for ln in block.splitlines()
+            if re.match(r"(import|from)\s+\w", ln))
+        try:
+            exec(compile(imports, f"{path.name}:snippet{n}:imports",
+                         "exec"), {})
+        except Exception as e:
+            problems.append(f"{path.relative_to(ROOT)} snippet {n}: "
+                            f"import check failed: {e!r}")
+    return n
+
+
+def main() -> int:
+    sys.path.insert(0, str(ROOT / "src"))
+    problems: list = []
+    n_links = n_snips = 0
+    files = doc_files()
+    missing = [name for name in ("README.md", "docs/ARCHITECTURE.md",
+                                 "docs/BENCHMARKS.md")
+               if not (ROOT / name).exists()]
+    for name in missing:
+        problems.append(f"required doc missing: {name}")
+    for f in files:
+        n_links += check_links(f, problems)
+        n_snips += check_snippets(f, problems)
+    print(f"docs check: {len(files)} files, {n_links} internal links, "
+          f"{n_snips} python snippets")
+    if problems:
+        for p in problems:
+            print(f"  FAIL {p}")
+        return 1
+    print("  OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export ARTIFACTS_DIR="${ARTIFACTS_DIR:-artifacts}"
 mkdir -p "$ARTIFACTS_DIR"
 
+# Docs gate first (cheap): README/docs internal links must resolve and
+# the README quickstart snippets must parse with importable imports.
+python ci/check_docs.py
+
 # Engine property suite first, as its own pinned gate: the hypothesis
 # variants are derandomized with deadline=None (no deadline flakes;
 # they self-skip when hypothesis is absent from the image) and their
@@ -55,6 +59,11 @@ print(f"  fanout: peak={ps['blocks_live_peak']} "
       f"unshared={ps['blocks_naive_unshared']} "
       f"saved={ps['blocks_saved_by_sharing_peak']} "
       f"tok_s={ps['decode_tok_s']:.1f}")
+sc = bench["shape_churn"]
+print(f"  shape churn: compiles={sc['prefill_compiles']} "
+      f"(bound {sc['compile_bound']}, legacy keys "
+      f"{sc['legacy_shape_keys']}) ttft_ms_p50={sc['ttft_ms_p50']:.1f} "
+      f"p99={sc['ttft_ms_p99']:.1f}")
 if sp["prefix_hit_rate"] <= 0 or sp["cached_tokens"] <= 0:
     sys.exit("FAIL: shared-prefix workload reports a zero prefix-cache "
              "hit rate — prefix caching is silently broken or disabled")
@@ -70,4 +79,16 @@ if ps["blocks_saved_by_sharing_peak"] <= 0:
              "by fork sharing")
 if not ps["siblings_bitexact"]:
     sys.exit("FAIL: fanout siblings diverged from independent reruns")
+# Shape-stability tripwire: the churny mixed-length workload must serve
+# from a bounded set of chunk-step executables (one per pool key) — a
+# count above the documented bound means some extent leaked back into
+# the compile key and production traffic would recompile per shape.
+if sc["prefill_compiles"] > sc["compile_bound"]:
+    sys.exit(f"FAIL: shape-churn workload compiled the chunk step "
+             f"{sc['prefill_compiles']}x (documented bound: "
+             f"{sc['compile_bound']} per pool key; legacy shape keying "
+             f"would have been {sc['legacy_shape_keys']})")
+if sc["legacy_shape_keys"] <= sc["compile_bound"]:
+    sys.exit("FAIL: shape-churn workload produced no shape churn — the "
+             "gate is vacuous")
 EOF

@@ -169,10 +169,11 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.reshape(b, h, d)
 
 
-@partial(jax.jit, static_argnames=("causal", "q_offset", "interpret",
+@partial(jax.jit, static_argnames=("causal", "interpret",
                                    "block_q", "block_k"))
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                  causal: bool = True, q_offset: int = 0,
+                  causal: bool = True, q_offset=0,
+                  q_lens=None, k_lens=None,
                   block_q: int = 128, block_k: int = 128,
                   interpret: bool = False) -> jax.Array:
     """Full-sequence attention: q (B,Sq,H,D); k/v (B,Sk,KVH,D) ->
@@ -180,9 +181,15 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     GQA KV heads are repeated to H (XLA keeps it a gather) and the head
     axis folds into the grid's batch dim; blocks pad via the wrapper.
-    ``Sk > Sq`` with a static ``q_offset`` is the chunked-prefill form:
-    query row i sits at global position ``q_offset + i`` and attends the
-    prefix keys plus its own chunk causally."""
+    ``Sk > Sq`` with a ``q_offset`` is the chunked-prefill form: query
+    row i of batch row b sits at global position ``q_offset[b] + i`` and
+    attends the prefix keys plus its own chunk causally.  ``q_offset``
+    (int or (B,)) and the optional per-row valid extents ``q_lens`` /
+    ``k_lens`` (B,) are *traced data* carried into the kernel by scalar
+    prefetch — NOT static arguments — so serving traffic with churning
+    chunk lengths and offsets shares one compiled executable per padded
+    shape (the shape-stability contract of
+    models/transformer.prefill_chunk_batch)."""
     b, sq, h, d = q.shape
     sk = k.shape[1]
     kvh = k.shape[2]
@@ -194,6 +201,16 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = jnp.moveaxis(vr, 2, 1).reshape(b * h, sk, d)
     bq = _largest_block(sq, block_q)
     bk = _largest_block(sk, block_k)
-    out = flash_prefill_pallas(qf, kf, vf, causal=causal, q_offset=q_offset,
-                               block_q=bq, block_k=bk, interpret=interpret)
+
+    def per_bh(x, fill):
+        """Per-batch scalar/array -> per-(batch*head) rows (b-major)."""
+        if x is None:
+            return jnp.full((b * h,), fill, jnp.int32)
+        x = jnp.broadcast_to(jnp.asarray(x, jnp.int32), (b,))
+        return jnp.repeat(x, h)
+
+    out = flash_prefill_pallas(
+        qf, kf, vf, causal=causal, q_offset=per_bh(q_offset, 0),
+        q_lens=per_bh(q_lens, sq), k_lens=per_bh(k_lens, sk),
+        block_q=bq, block_k=bk, interpret=interpret)
     return jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)

@@ -160,6 +160,104 @@ def attention_scores_blockwise(q, k, v, cfg: AttnConfig,
     return out
 
 
+def attention_chunk_merge(q, k_pfx, v_pfx, k_chunk, v_chunk,
+                          cfg: AttnConfig, q_pos, pfx_valid,
+                          chunk_valid) -> jax.Array:
+    """Shape-stable chunked-prefill attention: a fixed-extent *prefix*
+    segment merged with the chunk's own keys by exact softmax
+    renormalization.
+
+    q: (B, C, H, D) pre-scaled chunk queries at global positions
+    ``q_pos`` (B, C); k/v_chunk: (B, C, KVH, D) the chunk's own
+    (pre-quantization) keys, live where ``chunk_valid`` (B, C);
+    k/v_pfx: (B, P, KVH, D) the row's gathered pool extent — pool row
+    ``t`` sits at global position ``t`` — live where ``pfx_valid``
+    (B, P).  All extents are traced data, so chunk length, position
+    offset and batch padding never enter the compile key.
+
+    Numerics contract (what makes budget-padded serving trustworthy):
+
+      * the chunk segment is element-for-element
+        :func:`attention_scores_blockwise` — same einsums, same f32
+        softmax — and each segment's masked keys get *exactly zero*
+        probability mass (``exp(-1e30 - m)`` underflows to 0);
+      * the two segments merge as ``w_p * out_p + w_c * out_c`` with
+        ``w = alpha * l / (alpha_p l_p + alpha_c l_c)`` (flash-style
+        max/denominator renormalization).  An all-masked prefix gives
+        ``alpha_p == 0.0`` and ``w_c == l_c / l_c == 1.0`` *exactly*, so
+        a zero-offset row is **bit-identical** to the plain blockwise
+        oracle — which is how the whole-prompt chunk stays bit-identical
+        to one-shot prefill while the compile count stays shape-stable;
+      * a fully-padded row (everything masked) degrades to finite
+        garbage that the caller discards — the pool never holds
+        non-finite values, so no NaNs can leak through the ``0 * out_p``
+        term.
+
+    Rows with a non-empty prefix reassociate the softmax reduction
+    (prefix and chunk are reduced separately, then merged), so they
+    match a concatenated-key reference to last-ulp tolerance rather
+    than bitwise — the same tolerance class multi-chunk prefill already
+    carries vs one-shot.
+    """
+    b, c, h, d = q.shape
+    p_len = k_pfx.shape[1]
+    kvh = cfg.n_kv_heads
+    hq = h // kvh
+    qc = min(cfg.q_chunk, c)
+    while c % qc:
+        qc -= 1
+    n_chunks = c // qc
+
+    kgc = jnp.repeat(k_chunk, hq, axis=2).astype(q.dtype)   # (B, C, H, D)
+    vgc = jnp.repeat(v_chunk, hq, axis=2).astype(q.dtype)
+    kgp = jnp.repeat(k_pfx, hq, axis=2).astype(q.dtype)     # (B, P, H, D)
+    vgp = jnp.repeat(v_pfx, hq, axis=2).astype(q.dtype)
+    k_pos_c = q_pos                                          # chunk keys
+    k_pos_p = jnp.arange(p_len, dtype=jnp.int32)[None]       # pool rows
+    qg = q.reshape(b, n_chunks, qc, h, d)
+    qp = q_pos.reshape(b, n_chunks, qc)
+
+    def segment(qi, qpos, kg, vg, k_pos, k_valid, causal):
+        """Masked softmax attention over one key segment; returns the
+        normalized output plus (max, denominator) for the merge."""
+        scores = jnp.einsum("bqhd,bthd->bhqt", qi.astype(jnp.float32),
+                            kg.astype(jnp.float32))
+        mask = k_valid[:, None, :]                           # (B, qc?, T)
+        if causal:
+            mask = mask & (k_pos[:, None, :] <= qpos[:, :, None])
+        if cfg.window > 0:
+            mask = mask & (k_pos[:, None, :] > qpos[:, :, None] - cfg.window)
+        scores = jnp.where(mask[:, None], scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)          # (B,H,qc,1)
+        e = jnp.exp(scores - m)
+        l = jnp.sum(e, axis=-1, keepdims=True)
+        p = e / l
+        out = jnp.einsum("bhqt,bthd->bqhd", p.astype(q.dtype), vg)
+        return out, m, l
+
+    @jax.checkpoint
+    def chunk_fn(carry, inputs):
+        qi, qpos = inputs                               # (B,qc,H,D), (B,qc)
+        out_c, m_c, l_c = segment(qi, qpos, kgc, vgc, k_pos_c, chunk_valid,
+                                  cfg.causal)
+        # prefix keys sit strictly below every live query position, so
+        # validity already implies causality; the window (if any) still
+        # applies
+        out_p, m_p, l_p = segment(qi, qpos, kgp, vgp, k_pos_p, pfx_valid,
+                                  False)
+        m = jnp.maximum(m_p, m_c)
+        a_p = jnp.exp(m_p - m) * l_p
+        a_c = jnp.exp(m_c - m) * l_c
+        l = a_p + a_c
+        w_p = jnp.moveaxis(a_p / l, 1, 2)               # (B, qc, H, 1)
+        w_c = jnp.moveaxis(a_c / l, 1, 2)
+        return carry, w_p * out_p + w_c * out_c
+
+    _, outs = lax.scan(chunk_fn, None,
+                       (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, c, h, d)
+
+
 def attention_decode(q, k_cache, v_cache, length, cfg: AttnConfig,
                      k_scale=None, v_scale=None) -> jax.Array:
     """Single-position attention against a cache (jnp path — shardable).

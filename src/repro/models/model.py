@@ -34,10 +34,16 @@ class Model:
     # -> (last-position logits, updated cache).  None when paging is
     # unsupported.
     prefill_chunk: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
-    # batched chunk execution: prefill_chunk_batch(params, tokens (B, c),
-    # cache, slots, pos_offset) -> ((B, V) logits, cache) — one device
-    # call for same-shape chunks across B distinct slots.
+    # shape-stable batched chunk execution: prefill_chunk_batch(params,
+    # tokens (B, c), cache, slots, pos_offsets, chunk_lens=...) ->
+    # ((B, V) logits, cache) — one device call for ALL of a step's
+    # chunks; rows carry their own (chunk_len, pos_offset) as data and
+    # negative slots mark padding rows, so the engine pads to one fixed
+    # extent and the compile count stays one per pool key.
     prefill_chunk_batch: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    # shape-stability probe: distinct XLA compiles of the chunk step so
+    # far (transformer.prefill_chunk_compiles); None when unpaged.
+    prefill_compile_count: Optional[Callable[[], int]] = None
 
     def quantize(self, params, policy: Optional[QuantPolicy] = None,
                  fuse_decode: bool = True):
@@ -63,14 +69,16 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, c, t, **kw),
             init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
         )
-    paged = chunk = chunk_batch = None
+    paged = chunk = chunk_batch = compiles = None
     if transformer.supports_paged_cache(cfg):
         paged = lambda bsz, **kw: transformer.init_paged_cache(cfg, bsz, **kw)
         chunk = lambda p, t, c, slot, off: transformer.prefill_chunk(
             p, cfg, t, c, slot, off)
-        chunk_batch = lambda p, t, c, slots, off, page_table=None: \
-            transformer.prefill_chunk_batch(p, cfg, t, c, slots, off,
-                                            page_table=page_table)
+        chunk_batch = lambda p, t, c, slots, offs, page_table=None, \
+            chunk_lens=None: transformer.prefill_chunk_batch(
+                p, cfg, t, c, slots, offs, page_table=page_table,
+                chunk_lens=chunk_lens)
+        compiles = lambda: transformer.prefill_chunk_compiles(cfg)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -82,6 +90,7 @@ def build_model(cfg: ModelConfig) -> Model:
         init_paged_cache=paged,
         prefill_chunk=chunk,
         prefill_chunk_batch=chunk_batch,
+        prefill_compile_count=compiles,
     )
 
 

@@ -852,18 +852,21 @@ def prefill_chunk(params: Params, cfg: ModelConfig, tokens_chunk: jax.Array,
     coordinates, and its queries attend the ``pos_offset`` prefix rows
     already in the pool (read back through the page table, dequantized
     for int8 pools) plus the chunk itself, causally — ``pos_offset`` is
-    threaded into both rope and the causal mask (the jnp oracle's
-    ``q_offset``; kernels/flash_prefill.py carries the same offset on
-    TPU).  Numerics contract, verified by tests/test_scheduler.py:
+    *data*, threaded into rope, the causal mask and the prefix-validity
+    mask (layers.attention_chunk_merge is the jnp oracle;
+    kernels/flash_prefill.py carries the same per-row offsets via
+    scalar prefetch on TPU).  Numerics contract, verified by
+    tests/test_scheduler.py:
 
       * a single chunk covering the whole prompt is **bit-identical** to
-        the one-shot :func:`prefill` (same ops, same shapes);
+        the one-shot :func:`prefill` (an empty prefix segment merges
+        with weight exactly zero);
       * composed over multiple chunks, every query still reduces over
-        exactly the prefix-plus-own-chunk key set in the same order; the
-        only difference from one-shot is XLA reassociating reductions
-        across the different chunk extents, so float pools match
-        one-shot KV rows and logits to last-ulp tolerance (~1e-6 on
-        f32) with identical greedy streams;
+        exactly the prefix-plus-own-chunk key set — the prefix and chunk
+        segments are reduced separately and merged by softmax
+        renormalization, so float pools match one-shot KV rows and
+        logits to last-ulp reassociation tolerance with identical
+        greedy streams;
       * for int8 pools the stored codes match within the +-1 code that
         last-ulp projection differences can tip across a rounding
         boundary; cross-chunk attention additionally reads the
@@ -885,90 +888,148 @@ def prefill_chunk(params: Params, cfg: ModelConfig, tokens_chunk: jax.Array,
 
 def prefill_chunk_batch(params: Params, cfg: ModelConfig,
                         tokens_chunks: jax.Array, cache: Cache,
-                        slots, pos_offset: int,
-                        page_table=None) -> Tuple[jax.Array, Cache]:
-    """Prefill one same-shape prompt chunk for B sequences in ONE device
-    call (the batched-chunk-execution path: the engine groups chunks that
-    share ``(chunk_len, pos_offset)`` across slots instead of launching
-    ``prefill_chunk`` once per sequence).
+                        slots, pos_offsets,
+                        page_table=None,
+                        chunk_lens=None) -> Tuple[jax.Array, Cache]:
+    """Prefill one prompt chunk for up to B sequences in ONE device call —
+    **shape-stable**: rows may carry *different* chunk lengths and
+    position offsets, so the engine batches every chunk of a step (and
+    pads to a fixed ``(max_slots, prefill_chunk_tokens)`` extent) instead
+    of grouping by shape.
 
-    ``tokens_chunks`` is ``(B, c)``; ``slots`` lists B *distinct* slot
-    ids; every row starts at the same global ``pos_offset`` (so rope and
-    the causal-mask ``q_offset`` are shared) but reads its own prefix
-    blocks and writes its own chunk blocks through its page-table row —
-    per-row ``(B, c)`` block coordinates and ``(B, n_pfx)`` prefix ids
-    are resolved host-side, so the scatter/gather stays static advanced
-    indexing.  Returns per-row last-position logits ``(B, V)`` and the
-    updated cache with ``lens[slots] = pos_offset + c``.
+    ``tokens_chunks`` is ``(B, c)``; ``slots`` lists B slot ids, distinct
+    where valid — a negative slot marks a padding row that computes
+    nothing visible (its KV writes and ``lens`` update are dropped, its
+    logits row is garbage).  ``pos_offsets`` is an int or per-row (B,)
+    array of each row's global start position; ``chunk_lens`` (None = all
+    rows full) gives each row's valid token count — rows are masked past
+    it.  Returns per-row last-valid-position logits ``(B, V)`` and the
+    updated cache with ``lens[slot] = pos_offset + chunk_len`` per valid
+    row.
+
+    Everything data-like is *traced*: offsets, lengths, slot ids, block
+    coordinates and each row's full page-table row (the prefix is read as
+    a masked gather over the whole row rather than a ``pos_offset``-sized
+    slice).  The jit compile key is therefore just the padded ``(B, c)``
+    extent plus the pool shapes — **one compile per pool key**, however
+    traffic mixes chunk lengths, offsets, or batch composition
+    (tests/test_compile_stability.py asserts the bound; the engine
+    reports it via :func:`prefill_chunk_compiles`).
+
+    Numerics: masked keys carry exactly-zero probability mass and padded
+    rows/positions never write, so a padded call is bit-identical to the
+    equivalent unpadded per-shape calls — and the whole-prompt single
+    chunk stays bit-identical to one-shot :func:`prefill` (f32; int8
+    pools additionally match code-for-code).  For the MoE family,
+    capacity-limited routing is batch-dependent (it already was under
+    shape-grouped batching) — the exactness contract is stated for the
+    families whose per-token compute is row-independent.
 
     The traced body is jitted with the cache **donated** so each call
-    updates the pool in place instead of copying it; it recompiles per
-    distinct ``(B, chunk_len, pos_offset)`` triple — the slot ids ride
-    along as traced data, so serving the same chunk shape from a
-    different slot reuses the compile.
-
-    ``page_table`` may carry the caller's host-side copy of
-    ``cache["page_table"]`` (the engine publishes both from the same
-    allocator state) to spare a device readback per call.
+    updates the pool in place instead of copying it.  ``page_table`` may
+    carry the caller's host-side copy of ``cache["page_table"]`` (the
+    engine publishes both from the same allocator state) to spare a
+    device readback per call.
     """
     if "page_table" not in cache:
         raise ValueError("prefill_chunk requires a paged cache "
                          "(init_paged_cache)")
     toks = jnp.asarray(tokens_chunks, jnp.int32)
     b, c = toks.shape
-    if len(set(slots)) != b:
-        raise ValueError(f"slots {slots} must be {b} distinct ids")
-    bs = cache["attn"]["k"].shape[2]
+    slots = np.asarray(slots, np.int32).reshape(-1)
+    offs = np.broadcast_to(np.asarray(pos_offsets, np.int32), (b,))
+    lens = (np.full((b,), c, np.int32) if chunk_lens is None
+            else np.asarray(chunk_lens, np.int32).reshape(-1))
+    valid = slots >= 0
+    live = slots[valid]
+    if len(set(live.tolist())) != len(live):
+        raise ValueError(f"slots {slots} must be distinct where valid")
+    nb, bs = cache["attn"]["k"].shape[1], cache["attn"]["k"].shape[2]
+    max_slots = cache["lens"].shape[0]
 
     # Host-side (concrete) addressing: each row's chunk lives at fixed
-    # (block, offset) coordinates in its own leased blocks.
+    # (block, offset) coordinates in its own leased blocks; positions
+    # past the row's valid length scatter out of bounds (dropped), so
+    # padding can never write into a block another sequence leases.
     pt = np.asarray(cache["page_table"] if page_table is None
                     else page_table)
-    gpos = np.arange(pos_offset, pos_offset + c)
-    n_pfx = -(-pos_offset // bs)
-    chunk_blk = np.empty((b, c), np.int32)
-    pfx_ids = np.empty((b, n_pfx), np.int32)
-    for i, slot in enumerate(slots):
-        row = pt[slot]
+    mb = pt.shape[1]
+    chunk_blk = np.full((b, c), nb, np.int32)
+    chunk_off = np.zeros((b, c), np.int32)
+    pt_rows = np.zeros((b, mb), np.int32)
+    for i in range(b):
+        if not valid[i] or lens[i] <= 0:
+            continue
+        row = pt[slots[i]]
+        gpos = np.arange(offs[i], offs[i] + lens[i])
         if np.any(row[gpos // bs] < 0):
-            raise ValueError(f"slot {slot} page table does not cover rows "
-                             f"[{pos_offset}, {pos_offset + c}) — allocate "
-                             "blocks before prefill_chunk")
-        chunk_blk[i] = row[gpos // bs]
-        pfx_ids[i] = row[:n_pfx]
-    chunk_off = jnp.asarray(gpos % bs, jnp.int32)               # (c,)
+            raise ValueError(f"slot {slots[i]} page table does not cover "
+                             f"rows [{offs[i]}, {offs[i] + lens[i]}) — "
+                             "allocate blocks before prefill_chunk")
+        chunk_blk[i, :lens[i]] = row[gpos // bs]
+        chunk_off[i, :lens[i]] = gpos % bs
+        pt_rows[i] = np.maximum(row, 0)     # -1 -> 0; masked by pos anyway
+    safe_slots = np.where(valid, slots, max_slots)     # OOB -> lens drop
 
     return _prefill_chunk_fn(cfg)(params, cache, toks,
-                                  jnp.asarray(chunk_blk), chunk_off,
-                                  jnp.asarray(pfx_ids),
-                                  jnp.asarray(np.asarray(slots, np.int32)),
-                                  pos_offset=pos_offset)
+                                  jnp.asarray(chunk_blk),
+                                  jnp.asarray(chunk_off),
+                                  jnp.asarray(pt_rows),
+                                  jnp.asarray(safe_slots),
+                                  jnp.asarray(offs),
+                                  jnp.asarray(np.where(valid, lens, 0)))
+
+
+def prefill_chunk_compiles(cfg: ModelConfig) -> int:
+    """How many distinct XLA executables back the chunked-prefill step
+    for ``cfg`` so far in this process — the shape-stability probe.
+
+    Counts the jit-cache entries of the traced chunk body (one per
+    distinct padded extent + pool shape, i.e. per *pool key*).  The
+    engine snapshots it into ``metrics["prefill_compiles"]`` /
+    ``plan_log``; tests and the shape-churn benchmark assert it stays at
+    one per pool key while traffic churns chunk lengths and offsets."""
+    return _prefill_chunk_fn(cfg)._cache_size()
 
 
 @functools.lru_cache(maxsize=None)
 def _prefill_chunk_fn(cfg: ModelConfig):
-    """Build (once per config) the jitted, cache-donating chunk step."""
+    """Build (once per config) the jitted, cache-donating chunk step.
+
+    All extents inside are data: ``offs``/``lens`` drive rope, the
+    causal mask, key validity, the KV scatter and the ``lens`` update,
+    so the compile key is only the padded shapes.  The prefix is read by
+    gathering each row's whole page-table row and masking keys at
+    positions ``>= offs[row]`` (the kernels/flash_prefill.py Pallas path
+    carries the same offsets via scalar prefetch and skips dead blocks
+    instead of masking a materialized gather)."""
     hd = cfg.hd()
     kvh = cfg.n_kv_heads
     int8 = _kv_int8(cfg)
     acfg = L.AttnConfig(cfg.n_heads, kvh, hd, causal=True,
                         q_chunk=cfg.q_chunk)
 
-    @functools.partial(jax.jit, static_argnames=("pos_offset",),
-                       donate_argnums=(1,))
-    def run(params, cache, toks, chunk_blk, chunk_off, pfx_ids, slots, *,
-            pos_offset: int):
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(params, cache, toks, chunk_blk, chunk_off, pt_rows, slots,
+            offs, lens):
         b, c = toks.shape
         bs = cache["attn"]["k"].shape[2]
-        n_pfx = pfx_ids.shape[1]
+        mb = pt_rows.shape[1]
 
-        positions = jnp.broadcast_to(
-            jnp.arange(pos_offset, pos_offset + c, dtype=jnp.int32)[None],
-            (b, c))
+        q_pos = offs[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        positions = q_pos
         if cfg.rope_type == "mrope":
             positions = jnp.broadcast_to(positions, (3, b, c))
         rope_cs = _rope_cos_sin(cfg, positions)
         x = embed_inputs(params, cfg, {"tokens": toks})
+
+        # key validity: pool row t sits at global position t (page
+        # tables are position-ordered) and is live strictly below the
+        # row's offset (the chunk's own keys are attended in float,
+        # pre-quantization); a chunk key is live below the row's valid
+        # length.
+        pfx_valid = jnp.arange(mb * bs, dtype=jnp.int32)[None] < offs[:, None]
+        chunk_valid = jnp.arange(c, dtype=jnp.int32)[None] < lens[:, None]
 
         def body(h, inp):
             lp, lc = inp
@@ -980,25 +1041,20 @@ def _prefill_chunk_fn(cfg: ModelConfig):
                 cos, sin = rope_cs
                 q = L.apply_rope(q, cos[:, :, None], sin[:, :, None])
                 k = L.apply_rope(k, cos[:, :, None], sin[:, :, None])
-            if pos_offset:
-                # each row gathers ITS prefix blocks (shared blocks may
-                # appear in several rows — reads never conflict)
-                kp = lc["k"][pfx_ids].reshape(b, n_pfx * bs, kvh, hd)
-                vp = lc["v"][pfx_ids].reshape(b, n_pfx * bs, kvh, hd)
-                if int8:
-                    kp = kp.astype(jnp.float32) * lc["ks"][pfx_ids].reshape(
-                        b, n_pfx * bs, kvh)[..., None]
-                    vp = vp.astype(jnp.float32) * lc["vs"][pfx_ids].reshape(
-                        b, n_pfx * bs, kvh)[..., None]
-                k_all = jnp.concatenate(
-                    [kp[:, :pos_offset].astype(k.dtype), k], axis=1)
-                v_all = jnp.concatenate(
-                    [vp[:, :pos_offset].astype(v.dtype), v], axis=1)
-            else:
-                k_all, v_all = k, v
-            out = L.attention_scores_blockwise(q * (hd ** -0.5), k_all,
-                                               v_all, acfg,
-                                               q_offset=pos_offset)
+            # each row gathers ITS page-table row (shared blocks may
+            # appear in several rows — reads never conflict); dead or
+            # not-yet-written positions are masked via k_valid
+            kp = lc["k"][pt_rows].reshape(b, mb * bs, kvh, hd)
+            vp = lc["v"][pt_rows].reshape(b, mb * bs, kvh, hd)
+            if int8:
+                kp = kp.astype(jnp.float32) * lc["ks"][pt_rows].reshape(
+                    b, mb * bs, kvh)[..., None]
+                vp = vp.astype(jnp.float32) * lc["vs"][pt_rows].reshape(
+                    b, mb * bs, kvh)[..., None]
+            out = L.attention_chunk_merge(q * (hd ** -0.5),
+                                          kp.astype(k.dtype),
+                                          vp.astype(v.dtype), k, v, acfg,
+                                          q_pos, pfx_valid, chunk_valid)
             out = qeinsum("bshk,dhk->bsd", out, lp["attn"]["wo"])
             h = h + out.astype(h.dtype)
             h = h + _mlp_or_moe(lp, h, cfg)
@@ -1007,23 +1063,30 @@ def _prefill_chunk_fn(cfg: ModelConfig):
             if int8:
                 kq_, ks_ = _quantize_kv(k)
                 vq_, vs_ = _quantize_kv(v)
-                lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(kq_)
-                lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(vq_)
-                lc["ks"] = lc["ks"].at[chunk_blk, chunk_off].set(ks_)
-                lc["vs"] = lc["vs"].at[chunk_blk, chunk_off].set(vs_)
+                lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(
+                    kq_, mode="drop")
+                lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(
+                    vq_, mode="drop")
+                lc["ks"] = lc["ks"].at[chunk_blk, chunk_off].set(
+                    ks_, mode="drop")
+                lc["vs"] = lc["vs"].at[chunk_blk, chunk_off].set(
+                    vs_, mode="drop")
             else:
                 lc["k"] = lc["k"].at[chunk_blk, chunk_off].set(
-                    k.astype(lc["k"].dtype))
+                    k.astype(lc["k"].dtype), mode="drop")
                 lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(
-                    v.astype(lc["v"].dtype))
+                    v.astype(lc["v"].dtype), mode="drop")
             return h, lc
 
         x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
         x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
-        logits = L.lm_head(_head_weight(params, cfg), x[:, -1])
+        last = jnp.clip(lens - 1, 0, c - 1)
+        logits = L.lm_head(_head_weight(params, cfg),
+                           x[jnp.arange(b), last])
         new_cache = dict(cache)
         new_cache["attn"] = new_attn
-        new_cache["lens"] = cache["lens"].at[slots].set(pos_offset + c)
+        new_cache["lens"] = cache["lens"].at[slots].set(offs + lens,
+                                                       mode="drop")
         return logits, new_cache
 
     return run

@@ -12,10 +12,11 @@ future work.  This engine is that future work, split into two layers:
     recompute-on-resume) when mid-decode growth finds the block pool
     exhausted.
   * :class:`Engine` (this file) owns *mechanism*: it executes each plan
-    verbatim — prompt chunks via ``model.prefill_chunk`` writing straight
-    into the paged pool (attending the already-written prefix through
-    the page table), running decodes as one batched ``decode_step`` —
-    plus sampling, RNG, timing and metrics.
+    verbatim — all prompt chunks of a step via ONE padded
+    ``model.prefill_chunk_batch`` call writing straight into the paged
+    pool (attending the already-written prefix through the page table),
+    running decodes as one batched ``decode_step`` — plus sampling, RNG,
+    timing and metrics.
 
 KV memory is **paged** by default (vLLM-style, serving/paged_cache.py):
 the device cache is a pool of ``page_size``-token blocks shared by every
@@ -31,12 +32,19 @@ cached prefix read-only into its page table, and the plan's chunks start
 past it — the shared prefix runs zero prefill tokens and, because decode
 attention already reads through the page table, needs no kernel changes.
 The engine also executes the plan's copy-on-write pairs (device block
-copies) before any write into a previously-shared block, and groups
-same-shape prefill chunks from different slots into ONE batched
-``prefill_chunk_batch`` device call per step.  Families whose cache is
-not a single attention bank (ssm / hybrid / audio / interleaved-moe)
-fall back to the dense per-slot reservation, where prompts are admitted
-as one whole-prompt chunk and preemption/caching never trigger.
+copies) before any write into a previously-shared block, and runs ALL of
+a step's prefill chunks as ONE **shape-stable** batched
+``prefill_chunk_batch`` device call: the batch is padded to a fixed
+``(max_slots, prefill_chunk_tokens)`` extent and every row's
+``(chunk_len, pos_offset)`` rides along as traced data, so the chunk
+step compiles once per pool key instead of once per distinct
+``(B, chunk_len, pos_offset)`` triple (``metrics["prefill_compiles"]``
+and the per-step ``plan_log`` entries expose the count; see
+docs/ARCHITECTURE.md for the shape-stability contract).  Families whose
+cache is not a single attention bank (ssm / hybrid / audio /
+interleaved-moe) fall back to the dense per-slot reservation, where
+prompts are admitted as one whole-prompt chunk and preemption/caching
+never trigger.
 
 Sampling matches the paper's evaluation setup: temperature 1.0, top-p 1.0
 (A.1) — but each request's ``temperature``/``top_p`` are honored, threaded
@@ -168,6 +176,21 @@ def sample_logits_per_row(keys, logits: jax.Array, temperature=1.0,
     return jax.vmap(one)(keys, logits, t, p)
 
 
+def legacy_chunk_shape_keys(plan_log) -> set:
+    """The ``(B, chunk_len, pos_offset)`` compile keys a per-shape-grouped
+    engine would have used for the chunks in ``plan_log`` — the
+    counterfactual cost that shape-stable padding avoids.  Consumed by
+    the shape_churn benchmark (CI gates on it being larger than the real
+    compile count) and tests/test_compile_stability.py."""
+    keys = set()
+    for plan in plan_log:
+        groups: Dict[Any, int] = {}
+        for (_, s, e) in plan.get("prefills", []):
+            groups[(e - s, s)] = groups.get((e - s, s), 0) + 1
+        keys |= {(n, ln, off) for (ln, off), n in groups.items()}
+    return keys
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _copy_pool_blocks(attn, src, dst):
     """Copy whole pool blocks src -> dst across every layer (and scale
@@ -205,6 +228,7 @@ class Engine:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.prefill_chunk_tokens = prefill_chunk_tokens
         # decode is the hot loop: jit once (cache/params structures are
         # stable).  Donating the cache avoids a copy per token.
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -240,7 +264,8 @@ class Engine:
                         "prefix_hits": 0, "prefix_cached_tokens": 0,
                         "prefix_evictions": 0, "fanouts": 0,
                         "blocks_live_peak": 0,
-                        "blocks_saved_by_sharing_peak": 0}
+                        "blocks_saved_by_sharing_peak": 0,
+                        "prefill_compiles": 0}
         self._host_pt: Optional[np.ndarray] = None
         self._done_at_prefill: List[Request] = []  # first-token stops
         self._uid = 0
@@ -305,8 +330,16 @@ class Engine:
                 self.cache["attn"] = _copy_pool_blocks(
                     self.cache["attn"], src, dst)
                 self.metrics["cow_copies"] += len(plan.cows)
-            for group in self._chunk_groups(plan.prefills):
-                self._run_chunks(group)
+            if plan.prefills:
+                self._run_chunks(plan.prefills)
+                # shape-stability probe: the chunk step's distinct-XLA-
+                # executable count must stay pinned at one per pool key
+                # however traffic churns chunk lengths / offsets / batch
+                # width (gated by tests + the shape_churn benchmark)
+                self.metrics["prefill_compiles"] = \
+                    self.prefill_compile_count()
+                self.plan_log[-1]["prefill_compiles"] = \
+                    self.metrics["prefill_compiles"]
             if self._done_at_prefill:
                 # sequences whose FIRST sampled token was terminal (stop
                 # id / eos / max_new_tokens=1) retired inside the chunk
@@ -338,32 +371,37 @@ class Engine:
         t = self.metrics["t_decode"]
         return self.metrics["tokens_out"] / t if t > 0 else 0.0
 
-    # -- internals ------------------------------------------------------
-    def _chunk_groups(self, prefills: List[PrefillChunk]
-                      ) -> List[List[PrefillChunk]]:
-        """Group this step's chunks by (chunk_len, pos_offset) — each
-        group becomes ONE batched device call (slots within a plan are
-        distinct by construction).  Dense fallback: singletons."""
-        if not self.paged:
-            return [[c] for c in prefills]
-        groups: Dict[Any, List[PrefillChunk]] = {}
-        for c in prefills:
-            groups.setdefault((c.end - c.start, c.start), []).append(c)
-        return list(groups.values())
+    def prefill_compile_count(self) -> int:
+        """Distinct XLA compiles of the chunked-prefill step so far in
+        this process (shared across engines with the same model config —
+        that sharing is the point: one pool key, one executable)."""
+        if self.model.prefill_compile_count is None:
+            return 0
+        return self.model.prefill_compile_count()
 
+    # -- internals ------------------------------------------------------
     def _run_chunks(self, chunks: List[PrefillChunk]) -> None:
-        """Execute one group of same-shape planned chunks — paged: one
-        batched ``prefill_chunk_batch`` call writing every row's KV
-        straight into its pool blocks; dense: per-sequence whole-prompt
-        prefill merged into the slot."""
+        """Execute ALL of this step's planned chunks — paged: one
+        shape-stable batched ``prefill_chunk_batch`` call, padded to the
+        fixed ``(max_slots, prefill_chunk_tokens)`` extent with per-row
+        valid lengths/offsets as data (padding rows carry slot -1 and
+        write nothing), writing every row's KV straight into its pool
+        blocks; dense: per-sequence whole-prompt prefill merged into the
+        slot."""
         if self.paged:
-            start = chunks[0].start
-            toks = jnp.asarray(np.stack(
-                [c.seq.tokens[c.start:c.end] for c in chunks]))
+            nrows, width = self.max_slots, self.prefill_chunk_tokens
+            toks = np.zeros((nrows, width), np.int32)
+            lens = np.zeros((nrows,), np.int32)
+            offs = np.zeros((nrows,), np.int32)
+            slots = np.full((nrows,), -1, np.int32)
+            for i, c in enumerate(chunks):
+                lens[i] = c.end - c.start
+                toks[i, :lens[i]] = c.seq.tokens[c.start:c.end]
+                offs[i] = c.start
+                slots[i] = c.seq.slot
             logits, self.cache = self.model.prefill_chunk_batch(
-                self.params, toks, self.cache,
-                [c.seq.slot for c in chunks], start,
-                page_table=self._host_pt)
+                self.params, toks, self.cache, slots, offs,
+                page_table=self._host_pt, chunk_lens=lens)
             self.metrics["chunk_batch_calls"] += 1
             for i, c in enumerate(chunks):
                 self._register_blocks(c.seq)

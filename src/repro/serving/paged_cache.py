@@ -1,10 +1,11 @@
 """Paged KV cache: refcounted copy-on-write block pool + prefix index.
 
-The fixed-slot engine (engine.py) reserves ``max_seq`` KV rows per slot —
-fine at small scale, but at 32k context × 128 slots the reservation is
-~100% waste for short requests.  Paged attention (vLLM) fixes this: the
-cache is a pool of fixed-size *blocks*; each sequence leases a block
-list; attention gathers its blocks through a page table.
+A fixed per-slot reservation (the engine's dense fallback) pins
+``max_seq`` KV rows per slot — fine at small scale, but at 32k context ×
+128 slots the reservation is ~100% waste for short requests.  Paged
+attention (vLLM) fixes this: the cache is a pool of fixed-size *blocks*;
+each sequence leases a block list; attention gathers its blocks through
+a page table.
 
 Design (jit-friendly — all shapes static):
 

@@ -16,8 +16,10 @@ into an explicit Sarathi/vLLM-style scheduler:
     ``prefill_chunk_tokens`` of prompt-chunk work, so long prompts are
     prefilled in fixed-size chunks *interleaved* with decode steps
     instead of ahead of them.  The engine executes the plan verbatim:
-    chunks via ``model.prefill_chunk`` against the paged pool, decodes as
-    one batched step.
+    ALL of a step's chunks as one padded ``model.prefill_chunk_batch``
+    call against the paged pool (per-row lengths/offsets are data — no
+    same-shape grouping, see docs/ARCHITECTURE.md on shape stability),
+    decodes as one batched step.
   * **Prefix reuse.**  Admission hashes the prompt's full blocks and asks
     the allocator for the longest cached run
     (``BlockAllocator.lookup_prefix``); hit blocks are mapped into the

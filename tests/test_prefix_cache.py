@@ -410,18 +410,32 @@ def test_same_shape_chunks_run_as_one_batched_call():
     assert [r.output for r in done] == refs
 
 
-def test_different_shape_chunks_fall_back_to_separate_calls():
+def test_different_shape_chunks_share_one_padded_call():
+    """Shape-stable batching: chunks with different lengths (and hence
+    different last-position indices) still execute as ONE padded device
+    call per step — with streams identical to serving each prompt
+    alone."""
     m, params = _f32_model()
     rng = np.random.default_rng(6)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in (12, 9)]
+
+    def isolated(p):
+        e = _engine(m, params)
+        e.submit(p, max_new_tokens=4, temperature=0.0)
+        (r,) = e.run()
+        return r.output
+
+    refs = [isolated(p) for p in prompts]
     eng = _engine(m, params)
-    eng.submit(rng.integers(4, 500, size=12).astype(np.int32),
-               max_new_tokens=4, temperature=0.0)
-    eng.submit(rng.integers(4, 500, size=9).astype(np.int32),
-               max_new_tokens=4, temperature=0.0)
-    done = eng.run()
+    for p in prompts:
+        eng.submit(p, max_new_tokens=4, temperature=0.0)
+    done = sorted(eng.run(), key=lambda r: r.uid)
     assert all(r.error is None for r in done)
     assert eng.metrics["prefill_chunks"] == 2
-    assert eng.metrics["chunk_batch_calls"] == 2
+    assert eng.metrics["chunk_batch_calls"] == 1, \
+        "mixed-shape chunks must share one padded device call"
+    assert [r.output for r in done] == refs
 
 
 # ---------------------------------------------------------------------------

@@ -99,10 +99,12 @@ def test_single_chunk_bit_exact_vs_oneshot_f32():
 
 @pytest.mark.parametrize("splits", [[8, 5, 8], [16, 5], [1, 20], [7, 7, 7]])
 def test_multi_chunk_matches_oneshot_f32(splits):
-    """Composed chunks reduce over the same key sets in the same order;
-    only XLA reassociating reductions across the different chunk extents
-    remains — stored KV rows and final logits agree to last-ulp
-    tolerance with the same argmax."""
+    """Composed chunks reduce over the same key sets; a later chunk's
+    queries reduce its prefix and chunk segments separately and merge
+    them by softmax renormalization (the shape-stable form), so stored
+    KV rows and final logits agree to last-ulp reassociation tolerance
+    with the same argmax (a whole-prompt single chunk stays *bitwise* —
+    see test_single_chunk_bit_exact_vs_oneshot_f32)."""
     m, params = _f32_model()
     rng = np.random.default_rng(1)
     plen = 21
@@ -113,7 +115,7 @@ def test_multi_chunk_matches_oneshot_f32(splits):
     for kk in ("k", "v"):
         np.testing.assert_allclose(
             _slot_rows(cache, blocks, plen, kk),
-            np.asarray(pcache["attn"][kk])[:, 0], rtol=1e-5, atol=1e-6)
+            np.asarray(pcache["attn"][kk])[:, 0], rtol=1e-5, atol=5e-6)
     np.testing.assert_allclose(np.asarray(l_chunk), np.asarray(l_one),
                                rtol=1e-5, atol=1e-5)
     assert int(jnp.argmax(l_chunk)) == int(jnp.argmax(l_one))
