@@ -26,7 +26,13 @@ exercise the scheduler subsystem end to end:
     the pre-shape-stable engine compiled per: reports the XLA compile
     count of the chunk step (must stay at ``compile_bound`` = one per
     pool key — CI fails above it), the legacy shape-key count it
-    *would* have compiled, and TTFT p50/p99 for the churny traffic.
+    *would* have compiled, and TTFT p50/p99 for the churny traffic,
+  * **fault_tolerance** — the same traffic served fault-free, with the
+    fault layer enabled-but-idle, and under a seeded FaultPlan hitting
+    one request per fault class: reports goodput (surviving tokens),
+    blast radius per fault, leaked blocks after the faulted drain, and
+    the two bit-exactness flags CI gates on (idle fault layer and fault
+    survivors must both match the fault-free streams exactly).
 
 Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
 artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
@@ -68,6 +74,11 @@ PS_MAX_NEW = 16              # each sibling's divergent tail: 1 block
 SC_PROMPT_LENS = (5, 23, 41, 7, 66, 14, 90, 31, 11, 53, 77, 19)
 SC_CHUNK_TOKENS = 48
 SC_COMPILE_BOUND = 1         # executables per pool key (docs/BENCHMARKS.md)
+
+# fault-tolerance workload: 6 singletons + one n_samples=2 group on an
+# ample pool; a seeded FaultPlan implicates one request per fault class
+FT_PROMPT_LENS = (8, 20, 12, 24, 10, 16, 14)   # last one is the group
+FT_MAX_NEW = 12
 
 
 def _build_model():
@@ -318,6 +329,124 @@ def run_shape_churn(model, params, quiet: bool = False,
     return result
 
 
+def run_fault_tolerance(model, params, quiet: bool = False) -> dict:
+    """Serve FT_PROMPT_LENS (6 singletons + one n_samples=2 group) three
+    times and report the fault layer's acceptance bars:
+
+      1. no fault layer (wall clock) — the reference streams,
+      2. fault layer ENABLED but with an empty plan, SimClock, per-step
+         allocator audit — must be bit-identical to run 1
+         (``faultfree_bitexact``; CI fails otherwise: the hooks must be
+         free when nothing is armed),
+      3. a seeded FaultPlan implicating one request per fault class
+         (transient blip, persistent step fault, NaN row, page-table
+         corruption, deadline expiry) — each class must fail exactly its
+         target (``blast_radius_max`` <= 1 request; a sampling group
+         counts as one), the survivors' streams must match run 1 bit for
+         bit (``survivors_bitexact``), and the drained pool must hold
+         zero leases and a clean audit (``leaked_blocks`` == 0,
+         ``audit_clean``) — all CI-gated.
+
+    Goodput is reported as surviving-request tokens (count + fraction of
+    the fault-free total); run 3 runs on the simulated clock (the
+    deadline fault needs it), so its wall-clock tok/s is not measurable
+    — ``decode_tok_s_faultfree`` carries run 1's real throughput."""
+    from repro.serving.engine import Engine
+    from repro.serving.faults import FaultPlan, SimClock
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in FT_PROMPT_LENS]
+
+    def mk_engine(**kw):
+        return Engine(model, params, max_slots=8, max_seq=64, page_size=8,
+                      prefill_chunk_tokens=32, prefix_caching=False, **kw)
+
+    def submit_all(eng, deadlines: bool = False):
+        for i, p in enumerate(prompts):
+            uid = i + 1
+            eng.submit(p, max_new_tokens=FT_MAX_NEW, temperature=1.0,
+                       seed=300 + i, n_samples=2 if uid == 7 else 1,
+                       deadline_ms=250.0 if deadlines and uid == 5
+                       else None)
+
+    eng0 = mk_engine()
+    submit_all(eng0)
+    base = {r.uid: r for r in eng0.run()}
+    assert all(r.error is None for r in base.values())
+    streams0 = {u: r.outputs for u, r in base.items()}
+
+    eng1 = mk_engine(faults=FaultPlan(), clock=SimClock(),
+                     audit_interval=1)
+    submit_all(eng1)
+    idle = {r.uid: r for r in eng1.run()}
+    faultfree_bitexact = (
+        all(r.error is None for r in idle.values())
+        and {u: r.outputs for u, r in idle.items()} == streams0)
+
+    plan = (FaultPlan(seed=3)
+            .step_exception(step=2, times=1)              # transient blip
+            .step_exception(step=4, uid=2, times=10**6)   # -> "fault"
+            .nan_logits(step=5, uid=3)                    # -> "nan"
+            .corrupt_pages(step=3, uid=4)                 # -> "audit"
+            .advance_clock(step=6, ms=500.0))             # -> "deadline"
+    eng = mk_engine(faults=plan, clock=SimClock(), audit_interval=1)
+    submit_all(eng, deadlines=True)                       # uid 5: 250 ms
+    done = {r.uid: r for r in eng.run()}
+
+    failed = {u: r.error_kind for u, r in done.items()
+              if r.error is not None}
+    failed_by_kind: dict = {}
+    for kind in failed.values():
+        failed_by_kind[kind] = failed_by_kind.get(kind, 0) + 1
+    survivors = sorted(u for u in done if u not in failed)
+    survivors_bitexact = all(done[u].outputs == streams0[u]
+                             for u in survivors)
+    audit_clean = eng.pager.audit(repair=False).clean
+    leaked = (eng.pager.cfg.n_blocks - eng.pager.n_free()
+              + sum(1 for rc in eng.pager.refcount if rc))
+    tokens_total = sum(len(o) for r in base.values() for o in r.outputs)
+    goodput_tokens = sum(len(o) for u in survivors
+                         for o in done[u].outputs)
+
+    result = {
+        "requests": len(prompts),
+        "prompt_lens": list(FT_PROMPT_LENS),
+        "max_new_tokens": FT_MAX_NEW,
+        "injected_faults": sum(1 for f in plan.faults if f.fired),
+        "step_retries": eng.metrics["step_retries"],
+        "requests_failed": eng.metrics["requests_failed"],
+        "failed_by_kind": failed_by_kind,
+        "blast_radius_max": max(failed_by_kind.values(), default=0),
+        "survivors": survivors,
+        "faultfree_bitexact": bool(faultfree_bitexact),
+        "survivors_bitexact": bool(survivors_bitexact),
+        "leaked_blocks": int(leaked),
+        "audit_clean": bool(audit_clean),
+        "audit_repairs": eng.metrics["audit_repairs"],
+        "deadline_misses": eng.metrics["deadline_misses"],
+        "nan_rows": eng.metrics["nan_rows"],
+        "goodput_tokens": int(goodput_tokens),
+        "tokens_total_faultfree": int(tokens_total),
+        "goodput_fraction": goodput_tokens / max(1, tokens_total),
+        "decode_tok_s_faultfree": eng0.throughput_tok_s(),
+    }
+    if not quiet:
+        print(f"enginebench/fault_goodput,{result['goodput_fraction']:.2f},"
+              f"ratio ({goodput_tokens}/{tokens_total} tokens from"
+              f" {len(survivors)}/{len(prompts)} surviving requests)")
+        print(f"enginebench/fault_blast_radius,"
+              f"{result['blast_radius_max']},requests/fault"
+              f" ({failed_by_kind})")
+        print(f"enginebench/fault_bitexact,"
+              f"{int(faultfree_bitexact and survivors_bitexact)},bool"
+              f" (faultfree {faultfree_bitexact},"
+              f" survivors {survivors_bitexact};"
+              f" {result['leaked_blocks']} leaked blocks,"
+              f" audit clean {audit_clean})")
+    return result
+
+
 def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         max_new_tokens: int = 16) -> dict:
     from repro.serving.engine import Engine
@@ -362,6 +491,8 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     result["parallel_sampling"] = run_parallel_sampling(model, params,
                                                         quiet=quiet)
     result["shape_churn"] = run_shape_churn(model, params, quiet=quiet)
+    result["fault_tolerance"] = run_fault_tolerance(model, params,
+                                                    quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:

@@ -64,6 +64,12 @@ print(f"  shape churn: compiles={sc['prefill_compiles']} "
       f"(bound {sc['compile_bound']}, legacy keys "
       f"{sc['legacy_shape_keys']}) ttft_ms_p50={sc['ttft_ms_p50']:.1f} "
       f"p99={sc['ttft_ms_p99']:.1f}")
+ft = bench["fault_tolerance"]
+print(f"  fault tolerance: goodput={ft['goodput_fraction']:.2f} "
+      f"({ft['goodput_tokens']}/{ft['tokens_total_faultfree']} tokens) "
+      f"blast_radius_max={ft['blast_radius_max']} "
+      f"failed={ft['failed_by_kind']} leaked={ft['leaked_blocks']} "
+      f"bitexact={ft['faultfree_bitexact'] and ft['survivors_bitexact']}")
 if sp["prefix_hit_rate"] <= 0 or sp["cached_tokens"] <= 0:
     sys.exit("FAIL: shared-prefix workload reports a zero prefix-cache "
              "hit rate — prefix caching is silently broken or disabled")
@@ -91,4 +97,28 @@ if sc["prefill_compiles"] > sc["compile_bound"]:
 if sc["legacy_shape_keys"] <= sc["compile_bound"]:
     sys.exit("FAIL: shape-churn workload produced no shape churn — the "
              "gate is vacuous")
+# Fault-isolation tripwires: (a) a fault may fail at most its own
+# request / sampling group — a larger blast radius means isolation
+# regressed into batch-wide failure; (b) a faulted run must drain with
+# every lease released — leaked blocks would slowly strangle the pool;
+# (c) the fault layer's hooks must be free when idle, and survivors of
+# a faulted run must sample the exact streams of a fault-free run (the
+# per-row keyed PRNG contract) — any drift means the fault layer itself
+# perturbs serving.
+if ft["injected_faults"] <= 0 or ft["requests_failed"] <= 0:
+    sys.exit("FAIL: fault-tolerance workload injected nothing — the "
+             "gates below are vacuous")
+if ft["blast_radius_max"] > 1:
+    sys.exit(f"FAIL: a single fault failed {ft['blast_radius_max']} "
+             f"requests ({ft['failed_by_kind']}) — blast radius must "
+             f"stay within the implicated request/sampling group")
+if ft["leaked_blocks"] != 0 or not ft["audit_clean"]:
+    sys.exit(f"FAIL: faulted drain leaked {ft['leaked_blocks']} blocks "
+             f"(audit clean: {ft['audit_clean']})")
+if not ft["faultfree_bitexact"]:
+    sys.exit("FAIL: enabling the fault layer with an empty plan changed "
+             "token streams — the hooks are not free when idle")
+if not ft["survivors_bitexact"]:
+    sys.exit("FAIL: surviving requests of the faulted run diverged from "
+             "the fault-free streams — fault isolation is not bit-exact")
 EOF

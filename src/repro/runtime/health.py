@@ -9,15 +9,21 @@ Three mechanisms (DESIGN.md §4, "design for 1000+ nodes"):
 
   HeartbeatMonitor    every host stamps a monotonic counter each step;
                       hosts silent for > ``timeout_steps`` are suspects.
+                      **Launcher-only**: nothing in-process consumes it
+                      (a single-host engine cannot miss its own beat).
   StragglerDetector   per-step durations; hosts slower than
                       ``threshold`` x the rolling median get flagged —
                       the launcher re-slices their data shard (work
                       stealing) or schedules them for replacement.
+                      The serving engine also runs one single-host
+                      instance (``record_slow``) and surfaces flagged
+                      steps as ``Engine.metrics["slow_steps"]``.
   ElasticPlan         given the dead-host set, computes the largest
                       usable (pod, data) slice that preserves the model
                       axis (TP groups must stay whole), and the
                       re-sharding plan for the data axis: which
                       checkpoint shards each surviving host reloads.
+                      **Launcher-only**, like HeartbeatMonitor.
 """
 
 from __future__ import annotations
@@ -70,6 +76,19 @@ class StragglerDetector:
 
     def record(self, host_id: int, step_time_s: float) -> None:
         self._times[host_id].append(step_time_s)
+
+    def record_slow(self, host_id: int, step_time_s: float) -> bool:
+        """Record one step and return True when it is a straggler step
+        *relative to this host's own rolling median* — the single-host
+        form of :meth:`stragglers` (which needs a fleet to compare
+        against).  The comparison runs before the sample joins the
+        window, so one slow step cannot hide itself by dragging the
+        median up; it stays False until the window is half warm."""
+        ts = self._times[host_id]
+        slow = (len(ts) >= max(self.window // 2, 2)
+                and step_time_s > self.threshold * self._median(ts))
+        ts.append(step_time_s)
+        return slow
 
     def _median(self, xs: Sequence[float]) -> float:
         s = sorted(xs)

@@ -1,2 +1,4 @@
 """Serving: continuous batching engine + sampling (paper A.1 settings)."""
 from repro.serving.engine import Engine, Request, sample_logits
+from repro.serving.faults import (FaultInjector, FaultPlan, SchedulerStall,
+                                  SimClock)

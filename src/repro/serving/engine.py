@@ -101,9 +101,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.runtime.health import StragglerDetector
+from repro.serving.faults import (ERR_AUDIT, ERR_DEADLINE, ERR_FAULT,
+                                  ERR_NAN, ERR_SHED, SITE_DECODE,
+                                  SITE_PREFILL, FaultInjector,
+                                  InjectedFault, SchedulerStall)
 from repro.serving.paged_cache import (BlockAllocator, PagedConfig,
                                        chain_hash)
-from repro.serving.scheduler import PrefillChunk, Scheduler
+from repro.serving.scheduler import (PrefillChunk, Scheduler, StepPlan,
+                                     validate_request)
 
 
 @dataclasses.dataclass
@@ -119,6 +125,10 @@ class Request:
     #                               draws stream ``stream + i``)
     stop_tokens: Optional[Sequence[int]] = None  # per-request stop ids
     #                               honored alongside the global eos_id
+    deadline_ms: Optional[float] = None       # total budget since submit;
+    #                               the watchdog fails the request (typed
+    #                               .error) when it expires mid-flight
+    ttft_deadline_ms: Optional[float] = None  # first-token budget
     # filled by the engine:
     output: Optional[List[int]] = None           # == outputs[0]
     outputs: Optional[List[List[int]]] = None    # one stream per sibling
@@ -126,6 +136,7 @@ class Request:
     t_first_token: float = 0.0
     t_done: float = 0.0
     error: Optional[str] = None   # set when the engine rejects the request
+    error_kind: Optional[str] = None  # typed failure domain (faults.ERR_*)
     rng_key: Any = None           # PRNG root (derived from seed / engine)
 
 
@@ -222,13 +233,38 @@ class Engine:
                  cache_kind: str = "paged", page_size: int = 64,
                  n_pages: Optional[int] = None,
                  prefill_chunk_tokens: int = 512,
-                 prefix_caching: bool = True, preempt_limit: int = 3):
+                 prefix_caching: bool = True, preempt_limit: int = 3,
+                 faults: Any = None, clock: Any = None,
+                 nan_guard: bool = True, retry_limit: int = 2,
+                 audit_interval: int = 0,
+                 shed_after_preempts: Optional[int] = None,
+                 stall_shed_limit: int = 3):
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # -- fault domain (serving/faults.py) ----------------------------
+        # clock: None = wall time; else a callable or .now() object (a
+        # SimClock makes deadlines and latency faults deterministic)
+        if clock is None:
+            self._now = time.perf_counter
+        elif hasattr(clock, "now"):
+            self._now = clock.now
+        else:
+            self._now = clock
+        self._clock = clock
+        if faults is not None and not isinstance(faults, FaultInjector):
+            faults = FaultInjector(faults)     # accept a bare FaultPlan
+        self.faults: Optional[FaultInjector] = faults
+        self.nan_guard = nan_guard
+        self.retry_limit = retry_limit         # pre-dispatch retries/step
+        self.audit_interval = audit_interval   # 0 = no periodic audit
+        self.shed_after_preempts = shed_after_preempts
+        self.stall_shed_limit = stall_shed_limit
+        self.fault_log: List[Dict[str, Any]] = []
+        self.straggler = StragglerDetector(n_hosts=1)
         # decode is the hot loop: jit once (cache/params structures are
         # stable).  Donating the cache avoids a copy per token.
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -265,45 +301,109 @@ class Engine:
                         "prefix_evictions": 0, "fanouts": 0,
                         "blocks_live_peak": 0,
                         "blocks_saved_by_sharing_peak": 0,
-                        "prefill_compiles": 0}
+                        "prefill_compiles": 0,
+                        # fault-domain counters
+                        "step_retries": 0, "requests_failed": 0,
+                        "requests_rejected": 0, "nan_rows": 0,
+                        "deadline_misses": 0, "shed_requests": 0,
+                        "stalls": 0, "audit_repairs": 0,
+                        "audit_violations": 0, "slow_steps": 0}
         self._host_pt: Optional[np.ndarray] = None
         self._done_at_prefill: List[Request] = []  # first-token stops
         self._uid = 0
+        self._step = 0                     # monotonic step index (faults
+        #                                    key their schedules on it)
+        self._rejected: List[Request] = [] # submit-time rejections, drained
+        #                                    into run()'s done list
+        self._stall_streak = 0
+        self._preempt_streak = 0
+        if self.faults is not None:
+            self.faults.bind(clock=self._clock, pager=self.pager)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, **kw) -> int:
+        """Enqueue a request; returns its uid.  Malformed requests
+        (empty prompt, ``max_new_tokens`` that leaves no prompt room,
+        ``n_samples < 1``, groups wider than the slot table or on the
+        dense cache, prompts that could never fit the pool) get
+        ``.error`` set here and come back from the next :meth:`run`
+        without ever entering the scheduler; admission re-checks as the
+        run-time backstop."""
         self._uid += 1
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      t_enqueue=time.perf_counter(), output=[], **kw)
+                      t_enqueue=self._now(), output=[], **kw)
         if req.seed is not None:
             req.rng_key = jax.random.PRNGKey(req.seed)
         else:
             self.key, req.rng_key = jax.random.split(self.key)
+        err = validate_request(req, self.max_seq, self.max_slots,
+                               self.pager)
+        if err is not None:
+            req.error, req.error_kind = err
+            self._rejected.append(req)
+            return req.uid
         self.scheduler.add(req)
         return req.uid
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Serve until the scheduler drains.  Rejected requests (clamped
         ``max_new_tokens``, empty prompt, or a sequence the pool could
-        never hold) come back in the done list with ``.error`` set."""
+        never hold) come back in the done list with ``.error`` set — as
+        do requests failed mid-flight by the fault layer (persistent
+        step faults, NaN rows, deadline expiry, audit quarantine, load
+        shedding), each with a typed ``.error_kind`` while the rest of
+        the batch keeps serving."""
         done: List[Request] = []
+        if self._rejected:
+            now = self._now()
+            for req in self._rejected:
+                req.t_done = now
+                self.metrics["requests_rejected"] += 1
+                done.append(req)
+            self._rejected = []
         for _ in range(max_steps):
             if not self.scheduler.has_work():
                 break
-            plan = self.scheduler.schedule()
-            now = time.perf_counter()
+            self._step += 1
+            stalled = (self.faults is not None
+                       and self.faults.pre_step(self._step, self.scheduler))
+            if (self.paged and self.audit_interval
+                    and self._step % self.audit_interval == 0):
+                # BEFORE schedule(): a corrupted block must be caught and
+                # quarantined before the allocator can hand it out again
+                done.extend(self._run_audit())
+                if not self.scheduler.has_work():
+                    break
+            # an injected stall skips scheduling — the engine sees the
+            # idle plan a wedged scheduler would have produced
+            plan = StepPlan() if stalled else self.scheduler.schedule()
+            now = self._now()
             for req in plan.rejected:
                 req.t_done = now
+                self.metrics["requests_rejected"] += 1
                 done.append(req)
-            if not plan.made_progress():
+            expired = self._enforce_deadlines(plan)
+            done.extend(expired)
+            if not plan.made_progress() and not expired:
                 # the scheduler's contract is defer-preempt-or-reject; an
-                # idle plan with work pending means that contract broke —
-                # fail loudly instead of burning max_steps doing nothing
-                # (the seed engine spun here).
-                raise RuntimeError(
-                    "scheduler made no progress with work pending "
-                    f"(waiting={len(self.scheduler.waiting)}, "
-                    f"running={len(self.scheduler.running)})")
+                # idle plan with work pending means that contract broke.
+                # Fault layer on: degrade (shed the lowest-value waiter,
+                # keep serving) — off: raise the typed stall with the
+                # queue snapshot (the seed engine spun here).
+                done.extend(self._handle_stall(stalled))
+                continue
+            self._stall_streak = 0
+            if plan.preempted and self.shed_after_preempts is not None:
+                self._preempt_streak += 1
+                if self._preempt_streak >= self.shed_after_preempts:
+                    # preemption thrash: repeated evict/recompute cycles
+                    # mean demand exceeds the pool — shed load instead
+                    done.extend(self._shed(
+                        f"{self._preempt_streak} consecutive preempting "
+                        "steps (thrash)"))
+                    self._preempt_streak = 0
+            elif not plan.preempted:
+                self._preempt_streak = 0
             self.plan_log.append(plan.summary())
             self.metrics["preemptions"] = self.scheduler.n_preempted
             self.metrics["prefix_hits"] = \
@@ -330,8 +430,9 @@ class Engine:
                 self.cache["attn"] = _copy_pool_blocks(
                     self.cache["attn"], src, dst)
                 self.metrics["cow_copies"] += len(plan.cows)
+            t_step = self._now()
             if plan.prefills:
-                self._run_chunks(plan.prefills)
+                done.extend(self._run_chunks(plan.prefills))
                 # shape-stability probe: the chunk step's distinct-XLA-
                 # executable count must stay pinned at one per pool key
                 # however traffic churns chunk lengths / offsets / batch
@@ -347,6 +448,9 @@ class Engine:
                 self._done_at_prefill = []
             if plan.decodes:
                 done.extend(self._decode_once(plan.decodes))
+            if plan.has_work() and self.straggler.record_slow(
+                    0, self._now() - t_step):
+                self.metrics["slow_steps"] += 1
             if self.paged:
                 # fork-sharing accounting: each lease beyond a block's
                 # first is a block NOT copied (shared prompt KV)
@@ -379,16 +483,188 @@ class Engine:
             return 0
         return self.model.prefill_compile_count()
 
+    # -- fault domain ---------------------------------------------------
+    def _fail_request(self, req: Request, msg: str, kind: str,
+                      plan: Any = None, quarantine: bool = False
+                      ) -> Request:
+        """Fail ONE request (its whole sampling group) while the rest of
+        the batch keeps serving: quarantine its self-written KV blocks
+        when their content is suspect (NaN), retract anything it still
+        has planned, release every lease, stamp the typed error."""
+        if self.paged and quarantine:
+            bs = self.page_size
+            for slot, seq in list(self.scheduler.running.items()):
+                if seq.req is req:
+                    self.pager.quarantine(slot, seq.cached_len // bs)
+        self.scheduler.fail_request(req, plan)
+        req.error = msg
+        req.error_kind = kind
+        req.t_done = self._now()
+        self.metrics["requests_failed"] += 1
+        return req
+
+    def _survive_faults(self, site: str, items: List[Any], uid_of,
+                        alive) -> tuple:
+        """Pre-dispatch fault gate for one device batch.  Injected step
+        exceptions fire *before* the (donating) device call, so a retry
+        is always clean; a fault that persists past ``retry_limit``
+        isolates its target request (``.error`` set, leases released)
+        and the surviving rows dispatch without it.  Returns (surviving
+        items, failed requests)."""
+        failed: List[Request] = []
+        attempts = 0
+        while items:
+            try:
+                self.faults.raise_if_armed(
+                    site, self._step, [uid_of(x) for x in items])
+                break
+            except InjectedFault as exc:
+                attempts += 1
+                self.metrics["step_retries"] += 1
+                self.fault_log.append(
+                    {"step": self._step, "kind": "retry", "site": site,
+                     "uid": exc.uid, "attempt": attempts})
+                if attempts <= self.retry_limit:
+                    continue
+                if exc.uid is None:
+                    raise      # untargeted persistent fault: device loss,
+                    #            nothing to isolate — propagate
+                req = next(s.req for s in
+                           self.scheduler.running.values()
+                           if s.req.uid == exc.uid)
+                failed.append(self._fail_request(
+                    req, f"persistent {site}-step fault "
+                         f"({attempts} attempts)", ERR_FAULT))
+                self.fault_log.append(
+                    {"step": self._step, "kind": "isolated", "site": site,
+                     "uid": exc.uid, "attempts": attempts})
+                items = [x for x in items if alive(x)]
+                attempts = 0
+        return items, failed
+
+    def _enforce_deadlines(self, plan: Any) -> List[Request]:
+        """The per-step watchdog: fail every in-flight request past its
+        TTFT or total deadline (work it had planned this step retracts;
+        survivors' streams are unaffected — their sampling is per-row
+        keyed)."""
+        failed: List[Request] = []
+        now = self._now()
+        reqs: Dict[int, Request] = {}
+        for seq in list(self.scheduler.running.values()) \
+                + list(self.scheduler.waiting):
+            reqs.setdefault(seq.req.uid, seq.req)
+        for req in reqs.values():
+            if req.error is not None:
+                continue
+            age_ms = (now - req.t_enqueue) * 1e3
+            if (req.ttft_deadline_ms is not None
+                    and req.t_first_token == 0.0
+                    and age_ms > req.ttft_deadline_ms):
+                which, budget = "ttft", req.ttft_deadline_ms
+            elif req.deadline_ms is not None and age_ms > req.deadline_ms:
+                which, budget = "total", req.deadline_ms
+            else:
+                continue
+            self.metrics["deadline_misses"] += 1
+            self.fault_log.append({"step": self._step, "kind": "deadline",
+                                   "uid": req.uid, "budget": which})
+            failed.append(self._fail_request(
+                req, f"{which} deadline of {budget:g} ms exceeded "
+                     f"({age_ms:.1f} ms since submit)", ERR_DEADLINE,
+                plan=plan))
+        return failed
+
+    def _shed(self, reason: str) -> List[Request]:
+        """Admission-reject the lowest-value waiter (typed .error)."""
+        shed: List[Request] = []
+        for req in self.scheduler.shed_load(1):
+            req.error = f"load shed: {reason}"
+            req.error_kind = ERR_SHED
+            req.t_done = self._now()
+            self.metrics["shed_requests"] += 1
+            self.metrics["requests_failed"] += 1
+            self.fault_log.append({"step": self._step, "kind": "shed",
+                                   "uid": req.uid})
+            shed.append(req)
+        return shed
+
+    def _handle_stall(self, injected: bool) -> List[Request]:
+        """An idle plan with work pending.  Fault layer off: raise the
+        typed :class:`SchedulerStall` (contract violation).  On: shed
+        the lowest-value waiter and keep serving — bounded by
+        ``stall_shed_limit`` consecutive stalls with nothing sheddable,
+        after which the stall is genuine wedge and raises anyway."""
+        self.metrics["stalls"] += 1
+        self._stall_streak += 1
+        waiting, running = (len(self.scheduler.waiting),
+                            len(self.scheduler.running))
+        snapshot = {
+            "step": self._step, "injected": injected,
+            "waiting": [s.req.uid for s in self.scheduler.waiting],
+            "running": {slot: seq.req.uid for slot, seq
+                        in sorted(self.scheduler.running.items())}}
+        if self.faults is None:
+            raise SchedulerStall(
+                "scheduler made no progress with work pending "
+                f"(waiting={waiting}, running={running})", snapshot)
+        shed = self._shed("scheduler stall with work pending")
+        self.fault_log.append({"step": self._step, "kind": "stall",
+                               "injected": injected,
+                               "shed": [r.uid for r in shed]})
+        if not shed and self._stall_streak > self.stall_shed_limit:
+            raise SchedulerStall(
+                f"scheduler stalled {self._stall_streak} consecutive "
+                f"steps with nothing left to shed (waiting={waiting}, "
+                f"running={running})", snapshot)
+        return shed
+
+    def _run_audit(self) -> List[Request]:
+        """Periodic allocator self-audit (every ``audit_interval``
+        steps, before scheduling).  A dirty report repairs in place —
+        corrupted blocks quarantined, free list/LRU/refcounts rebuilt —
+        and fails exactly the requests leasing corrupted blocks; the
+        pool is coherent again before any new block is handed out."""
+        report = self.pager.audit(repair=True)
+        if report.clean:
+            return []
+        self.metrics["audit_repairs"] += 1
+        self.metrics["audit_violations"] += len(report.violations)
+        victims: Dict[int, Request] = {}
+        for slot in report.victim_slots:
+            seq = self.scheduler.running.get(slot)
+            if seq is not None:
+                victims.setdefault(seq.req.uid, seq.req)
+        self.fault_log.append(
+            {"step": self._step, "kind": "audit",
+             "violations": list(report.violations),
+             "corrupted_blocks": list(report.corrupted_blocks),
+             "victims": sorted(victims)})
+        return [self._fail_request(
+                    req, "KV blocks quarantined by allocator audit "
+                         f"({len(report.corrupted_blocks)} corrupted)",
+                    ERR_AUDIT)
+                for req in victims.values()]
+
     # -- internals ------------------------------------------------------
-    def _run_chunks(self, chunks: List[PrefillChunk]) -> None:
+    def _run_chunks(self, chunks: List[PrefillChunk]) -> List[Request]:
         """Execute ALL of this step's planned chunks — paged: one
         shape-stable batched ``prefill_chunk_batch`` call, padded to the
         fixed ``(max_slots, prefill_chunk_tokens)`` extent with per-row
         valid lengths/offsets as data (padding rows carry slot -1 and
         write nothing), writing every row's KV straight into its pool
         blocks; dense: per-sequence whole-prompt prefill merged into the
-        slot."""
+        slot.  Returns the requests the fault layer failed (persistent
+        injected prefill faults, non-finite logits rows)."""
+        failed: List[Request] = []
         if self.paged:
+            if self.faults is not None:
+                chunks, failed = self._survive_faults(
+                    SITE_PREFILL, list(chunks),
+                    uid_of=lambda c: c.seq.req.uid,
+                    alive=lambda c:
+                        self.scheduler.running.get(c.seq.slot) is c.seq)
+                if not chunks:
+                    return failed
             nrows, width = self.max_slots, self.prefill_chunk_tokens
             toks = np.zeros((nrows, width), np.int32)
             lens = np.zeros((nrows,), np.int32)
@@ -403,8 +679,30 @@ class Engine:
                 self.params, toks, self.cache, slots, offs,
                 page_table=self._host_pt, chunk_lens=lens)
             self.metrics["chunk_batch_calls"] += 1
+            if self.faults is not None:
+                row_uids = [c.seq.req.uid for c in chunks]
+                logits = self.faults.corrupt_logits(
+                    SITE_PREFILL, self._step, logits, row_uids)
+            finite = (np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+                      if self.nan_guard else None)
             for i, c in enumerate(chunks):
-                self._register_blocks(c.seq)
+                seq = c.seq
+                if self.scheduler.running.get(seq.slot) is not seq:
+                    continue     # torn down by an earlier row's failure
+                if finite is not None and not finite[i]:
+                    # a non-finite row means the KV this chunk wrote is
+                    # poison: quarantine before anything registers, fail
+                    # the request (its whole group) — the other rows of
+                    # this very batch are unaffected
+                    self.metrics["nan_rows"] += 1
+                    self.fault_log.append(
+                        {"step": self._step, "kind": "nan",
+                         "site": SITE_PREFILL, "uid": seq.req.uid})
+                    failed.append(self._fail_request(
+                        seq.req, "non-finite logits during prefill",
+                        ERR_NAN, quarantine=True))
+                    continue
+                self._register_blocks(seq)
                 self._finish_chunk(c, logits[i:i + 1])
         else:
             for c in chunks:
@@ -414,6 +712,7 @@ class Engine:
                     max_seq=self.max_seq)
                 self._merge_slot_cache(c.seq.slot, pcache, c.end)
                 self._finish_chunk(c, logits)
+        return failed
 
     def _stop_hit(self, seq, tok: int) -> bool:
         """The per-token finish predicate — shared by the decode loop
@@ -434,10 +733,11 @@ class Engine:
             seq.group.finished += 1
             if seq.group.finished < seq.group.n:
                 return None      # request done only when ALL siblings are
-        req.t_done = time.perf_counter()
+        req.t_done = self._now()
         if req.outputs is None:
             req.outputs = [seq.output]
         self.metrics["requests_done"] += 1
+        self._preempt_streak = 0     # completions prove we are not thrashing
         return req
 
     def _seq_key(self, seq) -> jax.Array:
@@ -492,7 +792,7 @@ class Engine:
             rows = jnp.asarray([s.slot for s in sibs[1:]], jnp.int32)
             self.cache["lens"] = jnp.asarray(self.cache["lens"]) \
                 .at[rows].set(seq.kv_len)
-        req.t_first_token = time.perf_counter()
+        req.t_first_token = self._now()
         for s in sibs:
             # a first token can already be terminal (a stop id, eos, or
             # max_new_tokens=1) — retire the sibling here instead of
@@ -556,11 +856,24 @@ class Engine:
         position) are ignored and their lengths re-synced after.
         Sampling is per-row keyed (``sample_logits_per_row``) so each
         sequence draws from its own stream regardless of who shares the
-        batch."""
+        batch — which is also what makes fault isolation bit-exact: a
+        row leaving the batch (failed request) cannot change any
+        survivor's draws."""
+        failed: List[Request] = []
+        if self.faults is not None:
+            slots, failed = self._survive_faults(
+                SITE_DECODE, list(slots),
+                uid_of=lambda s: self.scheduler.running[s].req.uid,
+                alive=lambda s: s in self.scheduler.running)
+            if not slots:
+                self.cache["lens"] = jnp.asarray(
+                    self.scheduler.device_lens(), jnp.int32)
+                return failed
         tokens = np.zeros((self.max_slots,), np.int32)
         temps = np.ones((self.max_slots,), np.float32)
         top_ps = np.ones((self.max_slots,), np.float32)
         key_rows: List[Any] = [None] * self.max_slots
+        row_uids: List[Optional[int]] = [None] * self.max_slots
         for i in slots:
             seq = self.scheduler.running[i]
             tokens[i] = seq.output[-1]
@@ -568,20 +881,43 @@ class Engine:
             top_ps[i] = seq.req.top_p
             key_rows[i] = jax.random.fold_in(self._seq_key(seq),
                                              len(seq.output))
+            row_uids[i] = seq.req.uid
         zero = jax.random.PRNGKey(0)
         keys = jnp.stack([k if k is not None else zero for k in key_rows])
 
-        t0 = time.perf_counter()
+        t0 = self._now()
+        if self.faults is not None:
+            self.faults.latency(self._step)   # simulated slow device step
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens))
+        if self.faults is not None:
+            logits = self.faults.corrupt_logits(
+                SITE_DECODE, self._step, logits, row_uids)
+        finite = (np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+                  if self.nan_guard else None)
         nxt = np.asarray(sample_logits_per_row(
             keys, logits, jnp.asarray(temps), jnp.asarray(top_ps)))
         self.metrics["decode_steps"] += 1
-        self.metrics["t_decode"] += time.perf_counter() - t0
+        self.metrics["t_decode"] += self._now() - t0
 
         finished: List[Request] = []
         for i in slots:
-            seq = self.scheduler.running[i]
+            seq = self.scheduler.running.get(i)
+            if seq is None or seq.req.error is not None:
+                continue        # torn down by an earlier row this step
+            if finite is not None and not finite[i]:
+                # NaN/inf logits on this row: its sampled token is
+                # garbage and the KV row it just wrote is suspect —
+                # quarantine + fail the request (group retires as a
+                # unit), everyone else's draws are independent
+                self.metrics["nan_rows"] += 1
+                self.fault_log.append(
+                    {"step": self._step, "kind": "nan",
+                     "site": SITE_DECODE, "uid": seq.req.uid})
+                failed.append(self._fail_request(
+                    seq.req, "non-finite logits during decode", ERR_NAN,
+                    quarantine=True))
+                continue
             tok = int(nxt[i])
             seq.output.append(tok)
             self.metrics["tokens_out"] += 1
@@ -592,6 +928,7 @@ class Engine:
                 done_req = self._finish_seq(seq)
                 if done_req is not None:
                     finished.append(done_req)
+        finished.extend(failed)
         # the scheduler's lengths are authoritative: decoded rows were
         # advanced at planning time, finished/free rows drop to 0, and a
         # mid-prefill row whose position the batched step bumped gets its

@@ -65,6 +65,27 @@ class OutOfBlocks(RuntimeError):
     pass
 
 
+@dataclasses.dataclass
+class AuditReport:
+    """Result of :meth:`BlockAllocator.audit`.
+
+    ``violations`` are human-readable invariant breaks; ``corrupted_blocks``
+    are block ids whose *content* can no longer be trusted (wrong
+    refcount, multiple ownership states while leased); ``victim_slots``
+    are the slots leasing a corrupted block — the engine fails exactly
+    those leaseholders.  ``repaired`` flips when the allocator rebuilt
+    itself back to a coherent state."""
+
+    violations: List[str] = dataclasses.field(default_factory=list)
+    corrupted_blocks: List[int] = dataclasses.field(default_factory=list)
+    victim_slots: List[int] = dataclasses.field(default_factory=list)
+    repaired: bool = False
+
+    @property
+    def clean(self) -> bool:
+        return not self.violations
+
+
 def chain_hash(parent: Optional[int], tokens) -> int:
     """Content hash of one full block given its prefix chain.
 
@@ -370,34 +391,143 @@ class BlockAllocator:
             pt[s, : len(blocks)] = blocks
         return pt
 
-    def debug_check(self) -> None:
-        """Assert the global invariants (tests call this after every op):
-        every block is in exactly one of {free, LRU, leased}; refcounts
-        equal lease multiplicity; index entries are coherent."""
-        lease_count = [0] * self.cfg.n_blocks
-        for blocks in self.owned:
+    def audit(self, repair: bool = False) -> AuditReport:
+        """Check (and with ``repair=True`` restore) the global
+        invariants: every block in exactly one of {free, LRU, leased};
+        refcounts equal lease multiplicity; prefix-index entries
+        coherent.
+
+        Detection never mutates.  Repair treats the page tables
+        (``owned``) as the ground truth — they are what the device
+        actually reads through — and rebuilds everything else around
+        them: corrupted blocks are quarantined (prefix-index entry
+        dropped, registration cleared — their KV is never served to a
+        future prefix lookup), refcounts are reset to lease
+        multiplicity, stale index entries are deleted, and the free
+        list / LRU are rebuilt (order-preserving, deduplicated).  The
+        caller decides what to do about ``victim_slots`` — the engine
+        fails exactly those leaseholders and releases their leases,
+        after which the pool is coherent again."""
+        rep = AuditReport()
+        n = self.cfg.n_blocks
+        lease_count = [0] * n
+        holders: Dict[int, List[int]] = {}
+        for s, blocks in enumerate(self.owned):
             for bid in blocks:
                 lease_count[bid] += 1
-        free_set = set(self.free)
-        assert len(free_set) == len(self.free), "free list duplicates"
-        assert not free_set & set(self.lru), "block both free and cached"
-        for bid in range(self.cfg.n_blocks):
+                holders.setdefault(bid, []).append(s)
+        corrupted = set()
+        free_set = set()
+        for bid in self.free:
+            if bid in free_set:
+                rep.violations.append(
+                    f"block {bid} duplicated on the free list")
+            free_set.add(bid)
+        for bid in range(n):
             states = (int(bid in free_set) + int(bid in self.lru)
                       + int(lease_count[bid] > 0))
-            assert states == 1, f"block {bid} in {states} states"
-            assert self.refcount[bid] == lease_count[bid], \
-                f"block {bid}: refcount {self.refcount[bid]} != " \
-                f"{lease_count[bid]} leases"
-            if bid in free_set:
-                assert self.block_hash[bid] is None
+            if states != 1:
+                rep.violations.append(
+                    f"block {bid} in {states} ownership states "
+                    f"(free={bid in free_set}, cached={bid in self.lru}, "
+                    f"leases={lease_count[bid]})")
+                if lease_count[bid] > 0:
+                    corrupted.add(bid)
+            if self.refcount[bid] != lease_count[bid]:
+                rep.violations.append(
+                    f"block {bid}: refcount {self.refcount[bid]} != "
+                    f"{lease_count[bid]} leases")
+                corrupted.add(bid)
+            if bid in free_set and self.block_hash[bid] is not None:
+                rep.violations.append(f"free block {bid} still registered")
             if bid in self.lru:
                 h = self.block_hash[bid]
-                assert h is not None and self.index.get(h) == bid
-            assert (self.block_hash[bid] is not None) == \
-                (bid in self.block_tokens), \
-                f"block {bid}: hash/token-id records out of sync"
+                if h is None or self.index.get(h) != bid:
+                    rep.violations.append(
+                        f"cached block {bid} lost its index entry")
+            if (self.block_hash[bid] is not None) != \
+                    (bid in self.block_tokens):
+                rep.violations.append(
+                    f"block {bid}: hash/token-id records out of sync")
         for h, bid in self.index.items():
-            assert self.block_hash[bid] == h, "stale index entry"
+            if not (0 <= bid < n) or self.block_hash[bid] != h:
+                rep.violations.append(
+                    f"index entry {h} -> block {bid} is stale")
+        rep.corrupted_blocks = sorted(corrupted)
+        rep.victim_slots = sorted(
+            {s for bid in corrupted for s in holders.get(bid, [])})
+        if repair and rep.violations:
+            self._repair(lease_count, corrupted)
+            rep.repaired = True
+        return rep
+
+    def _unregister(self, bid: int) -> None:
+        """Drop a block's prefix-index presence and registration."""
+        h = self.block_hash[bid]
+        if h is not None and self.index.get(h) == bid:
+            del self.index[h]
+        self.block_hash[bid] = None
+        self.block_tokens.pop(bid, None)
+
+    def _repair(self, lease_count: List[int], corrupted) -> None:
+        """Rebuild derived state around the page tables (see audit())."""
+        n = self.cfg.n_blocks
+        for bid in corrupted:
+            self._unregister(bid)
+        # stale / dangling index entries
+        for h, bid in list(self.index.items()):
+            if not (0 <= bid < n) or self.block_hash[bid] != h:
+                del self.index[h]
+        # hash-without-tokens (or the reverse) is unverifiable by
+        # lookup_prefix: drop the registration
+        for bid in range(n):
+            if (self.block_hash[bid] is not None) != \
+                    (bid in self.block_tokens):
+                self._unregister(bid)
+        self.refcount = list(lease_count)
+
+        def parked(bid: int) -> bool:
+            h = self.block_hash[bid]
+            return (lease_count[bid] == 0 and h is not None
+                    and self.index.get(h) == bid)
+
+        # LRU keeps its eviction order for still-valid entries; zero-ref
+        # registered blocks found elsewhere (e.g. wrongly freed) park at
+        # the newest end instead of losing their cached KV
+        new_lru = OrderedDict(
+            (bid, None) for bid in self.lru if parked(bid))
+        placed = set(new_lru)
+        new_free: List[int] = []
+        for bid in list(self.free) + list(range(n)):
+            if bid in placed or lease_count[bid] > 0:
+                continue
+            placed.add(bid)
+            if parked(bid):
+                new_lru[bid] = None
+            else:
+                self._unregister(bid)
+                new_free.append(bid)
+        self.lru = new_lru
+        self.free = new_free
+
+    def quarantine(self, slot: int, start_block: int = 0) -> None:
+        """Mark ``slot``'s leased blocks from ``start_block`` on as
+        suspect (e.g. the sequence produced non-finite logits, so the KV
+        it wrote cannot be trusted): their prefix-index entries drop and
+        their registrations clear, so ``release`` frees them instead of
+        parking them on the LRU — poisoned KV never survives to back a
+        later prefix hit.  Blocks below ``start_block`` (a mapped cached
+        prefix that predates the fault) stay registered."""
+        for bid in self.owned[slot][start_block:]:
+            self._unregister(bid)
+
+    def debug_check(self) -> None:
+        """Assert the global invariants (tests call this after every
+        op); the detection half of :meth:`audit`, kept assert-style for
+        test ergonomics."""
+        rep = self.audit(repair=False)
+        assert rep.clean, ("allocator invariants violated: "
+                           + "; ".join(rep.violations))
 
 
 def init_pool(cfg: PagedConfig):

@@ -87,7 +87,51 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.faults import ERR_CAPACITY, ERR_INVALID
 from repro.serving.paged_cache import BlockAllocator
+
+
+def validate_request(req: Any, max_seq: int, max_slots: int,
+                     pager: Optional[BlockAllocator]
+                     ) -> Optional[Tuple[str, str]]:
+    """Static request validation — everything knowable at ``submit()``
+    time, before any scheduling: malformed ``n_samples`` /
+    ``max_new_tokens``, empty prompt, a sampling group wider than the
+    slot table or on the dense cache, and a (clamped) prompt whose
+    blocks could never fit the whole pool.  Returns ``(message,
+    error_kind)`` or None.  Pure: the prompt is *not* clamped here —
+    admission does that.  The scheduler's ``_admission_error`` re-runs
+    these checks as the run-time backstop (resumed sequences regrow
+    their token lists; direct ``Scheduler.add`` callers skip submit)."""
+    n_samples = getattr(req, "n_samples", 1)
+    if n_samples < 1:
+        return f"n_samples={n_samples} must be >= 1", ERR_INVALID
+    if n_samples > 1:
+        if pager is None:
+            return ("n_samples > 1 requires the paged KV cache "
+                    "(fork/copy-on-write)"), ERR_INVALID
+        if n_samples > max_slots:
+            return (f"n_samples={n_samples} exceeds "
+                    f"max_slots={max_slots}"), ERR_INVALID
+    if req.max_new_tokens < 1:
+        return (f"max_new_tokens={req.max_new_tokens} must be >= 1",
+                ERR_INVALID)
+    keep = max_seq - req.max_new_tokens
+    if keep <= 0:
+        return (f"max_new_tokens={req.max_new_tokens} leaves no "
+                f"room for any prompt within max_seq={max_seq}"), ERR_INVALID
+    prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+    if prompt.size == 0:
+        return "empty prompt", ERR_INVALID
+    if pager is not None:
+        plen = min(int(prompt.size), keep)
+        need = pager.blocks_needed(plen)
+        if n_samples > 1:
+            need += pager.fork_cost(plen, n_samples)
+        if need > pager.cfg.n_blocks:
+            return (f"sequence needs {need} blocks, pool holds only "
+                    f"{pager.cfg.n_blocks}"), ERR_CAPACITY
+    return None
 
 
 @dataclasses.dataclass
@@ -286,7 +330,7 @@ class Scheduler:
             err = self._admission_error(seq)
             if err is not None:
                 self.waiting.popleft()
-                seq.req.error = err
+                seq.req.error, seq.req.error_kind = err
                 plan.rejected.append(seq.req)
                 continue
             # an unfanned sampling group admits once but will need n
@@ -383,39 +427,75 @@ class Scheduler:
             group.siblings.append(sib)
         return group.siblings
 
+    def fail_request(self, req: Any, plan: Optional[StepPlan] = None
+                     ) -> None:
+        """Tear down *every* sequence of ``req`` — running siblings and
+        requeued ones alike (a sampling group fails as a unit, so a
+        faulted sibling never leaves the rest racing a dead request).
+        Running slots release their block leases; anything ``req`` still
+        had planned in ``plan`` (decodes, prefill chunks, COW pairs)
+        retracts so the engine never executes work for it.  The caller
+        owns setting ``req.error`` / ``req.error_kind``."""
+        for slot, seq in list(self.running.items()):
+            if seq.req is req and self.running.get(slot) is seq:
+                if plan is not None:
+                    self._retract_planned(seq, plan)
+                self.running.pop(slot)
+                if self.pager is not None:
+                    self.pager.release(slot)
+        self.waiting = deque(s for s in self.waiting if s.req is not req)
+
+    def shed_load(self, k: int = 1) -> List[Any]:
+        """Graceful degradation: admission-reject up to ``k`` of the
+        lowest-value *waiting* requests (smallest progress first, then
+        newest-first) and return them for the engine to mark with a
+        typed ``.error``.  Requests with running siblings are exempt —
+        shedding targets work not yet holding device state, so dropping
+        it frees scheduler pressure without releasing any lease."""
+        running_uids = {s.req.uid for s in self.running.values()}
+        by_uid: Dict[int, List[Sequence]] = {}
+        for s in self.waiting:
+            if s.req.uid not in running_uids:
+                by_uid.setdefault(s.req.uid, []).append(s)
+        if not by_uid:
+            return []
+
+        def value(uid: int) -> Tuple[int, int]:
+            progress = max(len(s.output or []) for s in by_uid[uid])
+            return (progress, -uid)          # least done, then newest
+
+        shed: List[Any] = []
+        for uid in sorted(by_uid, key=value)[:k]:
+            req = by_uid[uid][0].req
+            self.waiting = deque(s for s in self.waiting
+                                 if s.req is not req)
+            shed.append(req)
+        return shed
+
     # -- internals -------------------------------------------------------
     def _slots_reserved(self) -> int:
         """Slots promised to running-but-unfanned sampling groups."""
         return sum(s.group.n - 1 for s in self.running.values()
                    if s.group is not None and not s.group.fanned)
 
-    def _admission_error(self, seq: Sequence) -> Optional[str]:
-        """Validate (and on first admission, clamp) a sequence; returns an
-        error string to reject with, or None."""
+    def _admission_error(self, seq: Sequence) -> Optional[Tuple[str, str]]:
+        """Validate (and on first admission, clamp) a sequence; returns
+        ``(error message, error kind)`` to reject with, or None.  Mostly
+        a backstop behind submit-time :func:`validate_request` — but the
+        pool-fit check re-runs against ``seq.tokens``, which outgrows
+        the prompt across preemption/resume cycles."""
         req = seq.req
-        n_samples = getattr(req, "n_samples", 1)
-        if n_samples < 1:
-            return f"n_samples={n_samples} must be >= 1"
-        if seq.group is not None and not seq.group.fanned:
-            if self.pager is None:
-                return ("n_samples > 1 requires the paged KV cache "
-                        "(fork/copy-on-write)")
-            if seq.group.n > self.max_slots:
-                return (f"n_samples={seq.group.n} exceeds "
-                        f"max_slots={self.max_slots}")
         if seq.tokens is None:
+            # the seed engine's `prompt[-max_seq + max_new_tokens:]`
+            # silently flipped to a positive-index slice on oversized
+            # max_new_tokens, keeping almost nothing; validate_request
+            # rejects that case and we clamp explicitly here.
+            err = validate_request(req, self.max_seq, self.max_slots,
+                                   self.pager)
+            if err is not None:
+                return err
             keep = self.max_seq - req.max_new_tokens
-            if req.max_new_tokens < 1:
-                return f"max_new_tokens={req.max_new_tokens} must be >= 1"
-            if keep <= 0:
-                # the seed engine's `prompt[-max_seq + max_new_tokens:]`
-                # silently flipped to a positive-index slice here, keeping
-                # almost nothing; clamp and reject instead.
-                return (f"max_new_tokens={req.max_new_tokens} leaves no "
-                        f"room for any prompt within max_seq={self.max_seq}")
             prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-            if prompt.size == 0:
-                return "empty prompt"
             if prompt.size > keep:
                 prompt = prompt[-keep:]
             seq.prompt = prompt
@@ -426,7 +506,7 @@ class Scheduler:
                 need += self.pager.fork_cost(len(seq.tokens), seq.group.n)
             if need > self.pager.cfg.n_blocks:
                 return (f"sequence needs {need} blocks, pool holds only "
-                        f"{self.pager.cfg.n_blocks}")
+                        f"{self.pager.cfg.n_blocks}", ERR_CAPACITY)
         return None
 
     def _select_victim(self) -> Sequence:
@@ -472,6 +552,7 @@ class Scheduler:
                         f"({self.pager.blocks_needed(seq.kv_len + 1)} "
                         f"blocks) — more than the whole "
                         f"{whole_pool}-block pool")
+                    seq.req.error_kind = ERR_CAPACITY
                     # a group fails as a unit: one sibling that can never
                     # fit dooms the request, so tear every sibling down
                     # (running and requeued alike) instead of leaving the
@@ -532,7 +613,9 @@ class Scheduler:
         into a reassigned block (the dst is ref-1 exclusive, so lease
         membership identifies the pairs).  Likewise its planned decode:
         the starvation bound (or a group unit-preemption) can evict a
-        sequence whose decode was already planned."""
+        sequence whose decode was already planned.  Planned prefill
+        chunks retract too (the watchdog can fail a mid-prefill request
+        after planning)."""
         if self.pager is not None and plan.cows:
             mine = set(self.pager.owned[seq.slot])
             plan.cows[:] = [p for p in plan.cows if p[1] not in mine]
@@ -540,6 +623,7 @@ class Scheduler:
             i = plan.decodes.index(seq.slot)
             plan.decodes.pop(i)
             plan.decode_uids.pop(i)
+        plan.prefills[:] = [c for c in plan.prefills if c.seq is not seq]
 
     def _preempt_unit(self, seq: Sequence, plan: StepPlan) -> None:
         """Preempt ``seq`` — and, when it belongs to a fanned sampling

@@ -38,6 +38,7 @@ from _hyp import given, settings, st
 
 import repro.serving.engine as engine_mod
 from repro.serving.engine import Engine
+from repro.serving.faults import FaultPlan
 
 # few distinct prompt lengths -> few (B, chunk_len, pos_offset) compile
 # triples; the allocator-level variety comes from the pool being tiny
@@ -54,15 +55,21 @@ def model_params():
 
 
 def _serve_and_check(model, params, specs, n_pages, max_slots=4,
-                     page_size=4, max_seq=48, chunk=8):
+                     page_size=4, max_seq=48, chunk=8, faults=None,
+                     audit_interval=0):
     """Serve ``specs`` step-by-step, asserting the invariants above.
 
     Each spec is (prompt_len_index, n_samples, max_new_tokens, greedy,
-    seed); prompts are deterministic in the seed.
+    seed); prompts are deterministic in the seed.  ``faults`` threads a
+    FaultPlan through (with ``audit_interval=1`` so injected page-table
+    corruption is caught and repaired before this harness's own per-step
+    ``debug_check`` sees it) — faulted requests come back errored but
+    every drain invariant must hold regardless.
     """
     eng = Engine(model, params, max_slots=max_slots, max_seq=max_seq,
                  page_size=page_size, n_pages=n_pages,
-                 prefill_chunk_tokens=chunk)
+                 prefill_chunk_tokens=chunk, faults=faults,
+                 audit_interval=audit_interval)
     pager = eng.pager
 
     # -- instrumentation ------------------------------------------------
@@ -176,6 +183,36 @@ class TestEngineInvariantProperties:
         pool = 8 + int(rng.integers(0, 7))
         eng, _ = _serve_and_check(model, params, specs, n_pages=pool)
         assert eng.metrics["decode_steps"] > 0
+
+    def test_seeded_fault_schedule_traffic(self, model_params):
+        """Random group traffic under a seeded fault schedule hitting
+        every injection class: a transient blip, a persistent per-request
+        fault, a NaN row, page-table corruption and a stall.  Implicated
+        requests come back with typed errors, everyone returns exactly
+        once, and the per-step + drain invariants (immutable registered
+        blocks, clean audits, zero leaked refcounts) hold throughout."""
+        model, params = model_params
+        rng = np.random.default_rng(11)
+        specs = [(int(rng.integers(0, len(PROMPT_LENS))),
+                  int(rng.integers(1, 5)), int(rng.integers(2, 7)),
+                  bool(rng.integers(0, 2)), int(rng.integers(0, 100)))
+                 for _ in range(5)]
+        plan = (FaultPlan(seed=11)
+                .step_exception(step=2, times=1)           # transient
+                .step_exception(step=4, uid=2, times=10**6)
+                .nan_logits(step=6, uid=3)
+                .corrupt_pages(step=8, uid=1)
+                .stall(step=3))
+        eng, by_uid = _serve_and_check(model, params, specs, n_pages=12,
+                                       faults=plan, audit_interval=1)
+        assert eng.metrics["step_retries"] >= 1
+        # uid-targeted persistent/NaN faults fire whenever their target
+        # is dispatched past the armed step; on this seed all three
+        # implicated requests are in flight then
+        failed = {u: r.error_kind for u, r in by_uid.items()
+                  if r.error is not None}
+        assert failed, "the fault schedule must implicate someone"
+        assert eng.metrics["requests_failed"] >= 1
 
     def test_oversubscribed_group_heavy_traffic_preempts(self, model_params):
         """All-groups traffic on a pool that cannot hold two fanned

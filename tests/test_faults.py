@@ -1,0 +1,520 @@
+"""Fault-isolated serving: deterministic injection, per-request failure
+domains, deadlines, allocator self-audit recovery.
+
+The contract under test (serving/faults.py + the engine's fault hooks):
+
+  * **Determinism** — a (traffic, FaultPlan) pair replays bit-identically;
+    the injector's log records exactly what fired where, with no wall
+    clock anywhere.
+  * **Blast radius** — a fault targeted at one request fails only that
+    request (its whole sampling group, as a unit) with a typed
+    ``.error_kind``; every *other* stream is bit-identical to a
+    fault-free run.  Per-row keyed sampling is the lever: a row leaving
+    the batch cannot change any survivor's draws.
+  * **Retry before isolate** — injected step exceptions fire before the
+    (cache-donating) device dispatch, so the engine retries clean up to
+    ``retry_limit`` and only then isolates the culprit.
+  * **Deadlines** — ``Request.deadline_ms`` / ``ttft_deadline_ms`` are
+    enforced by a watchdog against an injectable clock (SimClock), so
+    expiry tests don't sleep.
+  * **Audit recovery** — injected page-table corruption (refcount /
+    free-list / index flavors) is detected by ``BlockAllocator.audit``,
+    repaired in place (corrupted blocks quarantined, free list rebuilt),
+    and fails exactly the leaseholders; the pool drains with zero leaked
+    refcounts.
+  * **Degradation** — an idle plan with work pending sheds the
+    lowest-value waiter and keeps serving when the fault layer is on,
+    and raises the typed :class:`SchedulerStall` (queue snapshot
+    attached) when it is off.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.runtime.health import StragglerDetector
+from repro.serving.engine import Engine
+from repro.serving.faults import (ERR_AUDIT, ERR_CAPACITY, ERR_DEADLINE,
+                                  ERR_FAULT, ERR_INVALID, ERR_NAN, ERR_SHED,
+                                  FaultInjector, FaultPlan, SchedulerStall,
+                                  SimClock)
+from repro.serving.scheduler import StepPlan
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(compute_dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+PROMPT_SIZES = (6, 11, 9, 14)
+
+
+def _prompts(seed=0, sizes=PROMPT_SIZES):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, 500, size=n).astype(np.int32) for n in sizes]
+
+
+def _serve(model, params, prompts=None, deadlines=None, n_samples=None,
+           **kw):
+    """Submit ``prompts`` (seeded sampling, uid i+1 gets seed 100+i) and
+    drain; returns (engine, {uid: request})."""
+    prompts = _prompts() if prompts is None else prompts
+    eng = Engine(model, params, max_slots=4, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=16, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=8, temperature=1.0, seed=100 + i,
+                   deadline_ms=(deadlines or {}).get(i + 1),
+                   n_samples=(n_samples or {}).get(i + 1, 1))
+    done = eng.run()
+    return eng, {r.uid: r for r in done}
+
+
+@pytest.fixture(scope="module")
+def baseline(model_params):
+    """Fault-free streams every isolation test compares survivors to."""
+    model, params = model_params
+    eng, by = _serve(model, params)
+    assert all(r.error is None for r in by.values())
+    return {u: r.output for u, r in by.items()}
+
+
+# ---------------------------------------------------------------------------
+# determinism + the fault-free bit-exactness gate
+# ---------------------------------------------------------------------------
+
+
+def test_fault_layer_enabled_but_empty_is_bitexact(model_params, baseline):
+    """CI gate (c): engine with injector + SimClock + per-step audit but
+    an EMPTY plan must emit bit-identical streams to no fault layer."""
+    model, params = model_params
+    eng, by = _serve(model, params, faults=FaultPlan(), clock=SimClock(),
+                     audit_interval=1)
+    assert {u: r.output for u, r in by.items()} == baseline
+    assert eng.metrics["requests_failed"] == 0
+    assert eng.metrics["audit_repairs"] == 0
+
+
+def test_identical_plan_replays_identically(model_params):
+    model, params = model_params
+    plan = lambda: (FaultPlan(seed=7)                      # noqa: E731
+                    .step_exception(step=2, times=1)
+                    .nan_logits(step=5, uid=3)
+                    .corrupt_pages(step=6, uid=1))
+    runs = []
+    for _ in range(2):
+        eng, by = _serve(model, params, faults=FaultInjector(plan()),
+                         clock=SimClock(), audit_interval=1)
+        runs.append(({u: (r.output, r.error, r.error_kind)
+                      for u, r in by.items()}, eng.faults.log,
+                     eng.fault_log))
+    assert runs[0] == runs[1], "same (traffic, plan) must replay exactly"
+
+
+# ---------------------------------------------------------------------------
+# step exceptions: transient retry, persistent isolation
+# ---------------------------------------------------------------------------
+
+
+def test_transient_step_fault_retries_and_stays_bitexact(model_params,
+                                                         baseline):
+    model, params = model_params
+    p = FaultPlan().step_exception(step=2, times=1)
+    eng, by = _serve(model, params, faults=p, clock=SimClock())
+    assert eng.metrics["step_retries"] == 1
+    assert eng.metrics["requests_failed"] == 0
+    assert {u: r.output for u, r in by.items()} == baseline
+
+
+def test_persistent_fault_isolates_only_its_request(model_params, baseline):
+    model, params = model_params
+    p = FaultPlan().step_exception(step=3, uid=2, times=10**6)
+    eng, by = _serve(model, params, faults=p, clock=SimClock())
+    assert by[2].error is not None and by[2].error_kind == ERR_FAULT
+    # retried retry_limit times, then isolated — and once uid 2 left the
+    # batch the still-armed fault went quiet
+    assert eng.metrics["step_retries"] == eng.retry_limit + 1
+    survivors = {u: r.output for u, r in by.items() if u != 2}
+    assert survivors == {u: o for u, o in baseline.items() if u != 2}
+    assert all(r.error is None for u, r in by.items() if u != 2)
+    eng.pager.debug_check()
+    assert all(rc == 0 for rc in eng.pager.refcount)
+
+
+def test_untargeted_persistent_fault_propagates(model_params):
+    """No uid to isolate = simulated total device loss: after the retry
+    budget the InjectedFault escapes run() instead of spinning."""
+    from repro.serving.faults import InjectedFault
+    model, params = model_params
+    p = FaultPlan().step_exception(step=2, times=10**6)
+    eng = Engine(model, params, max_slots=4, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=16, faults=p, clock=SimClock())
+    eng.submit(_prompts()[0], max_new_tokens=8, temperature=0.0)
+    with pytest.raises(InjectedFault):
+        eng.run()
+
+
+# ---------------------------------------------------------------------------
+# NaN guard: request (and sampling group) fails as a unit, KV quarantined
+# ---------------------------------------------------------------------------
+
+
+def test_nan_row_fails_only_that_request(model_params, baseline):
+    model, params = model_params
+    p = FaultPlan().nan_logits(step=4, uid=3)
+    eng, by = _serve(model, params, faults=p, clock=SimClock())
+    assert by[3].error_kind == ERR_NAN and "logits" in by[3].error
+    assert eng.metrics["nan_rows"] == 1
+    assert {u: r.output for u, r in by.items() if u != 3} \
+        == {u: o for u, o in baseline.items() if u != 3}
+    eng.pager.debug_check()
+    assert eng.pager.n_free() == eng.pager.cfg.n_blocks
+
+
+def test_nan_during_decode_fails_sampling_group_as_unit(model_params):
+    model, params = model_params
+    prompts = _prompts(sizes=(9, 11))
+    eng, by = _serve(model, params, prompts=prompts,
+                     n_samples={1: 3},
+                     faults=FaultPlan().nan_logits(step=5, uid=1),
+                     clock=SimClock())
+    assert by[1].error_kind == ERR_NAN, (by[1].error, by[1].error_kind)
+    assert by[2].error is None and by[2].output
+    # the whole group is gone: no sibling still holds a lease
+    eng.pager.debug_check()
+    assert all(rc == 0 for rc in eng.pager.refcount)
+
+
+def test_nan_quarantine_keeps_poisoned_blocks_out_of_prefix_cache(
+        model_params):
+    """A NaN-failed sequence's self-written blocks must NOT park on the
+    LRU: resubmitting the same prompt may not hit the poisoned KV."""
+    model, params = model_params
+    prompt = _prompts(sizes=(24,))[0]      # 3 full blocks at page_size 8
+    p = FaultPlan().nan_logits(step=4, uid=1)
+    eng = Engine(model, params, max_slots=4, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=16, faults=p, clock=SimClock())
+    eng.submit(prompt, max_new_tokens=8, temperature=0.0)
+    (r,) = eng.run()
+    assert r.error_kind == ERR_NAN
+    # resubmit the identical prompt: admission must find NO cached prefix
+    hits0 = eng.scheduler.prefix_stats["hits"]
+    eng.submit(prompt, max_new_tokens=4, temperature=0.0)
+    (r2,) = eng.run()
+    assert r2.error is None
+    assert eng.scheduler.prefix_stats["hits"] == hits0, \
+        "poisoned KV blocks survived into the prefix index"
+
+
+# ---------------------------------------------------------------------------
+# deadlines (simulated clock — no sleeping)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expiry_fails_only_late_request(model_params, baseline):
+    model, params = model_params
+    p = FaultPlan().advance_clock(step=5, ms=500.0)
+    eng, by = _serve(model, params, faults=p, clock=SimClock(),
+                     deadlines={2: 100.0, 1: 10_000.0, 3: 10_000.0,
+                                4: 10_000.0})
+    assert by[2].error_kind == ERR_DEADLINE and "deadline" in by[2].error
+    assert eng.metrics["deadline_misses"] == 1
+    assert {u: r.output for u, r in by.items() if u != 2} \
+        == {u: o for u, o in baseline.items() if u != 2}
+    eng.pager.debug_check()
+
+
+def test_ttft_deadline(model_params):
+    """A request still waiting for its first token past its TTFT budget
+    fails even though its total budget is fine."""
+    model, params = model_params
+    clk = SimClock()
+    p = FaultPlan().advance_clock(step=1, ms=50.0)
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=8, faults=p, clock=clk)
+    pr = _prompts(sizes=(6, 30))
+    u1 = eng.submit(pr[0], max_new_tokens=4, temperature=0.0)
+    # 30-token prompt at 8-token chunks: several steps to first token,
+    # but time already jumped 50ms at step 1 -> TTFT budget of 10ms blows
+    u2 = eng.submit(pr[1], max_new_tokens=4, temperature=0.0,
+                    ttft_deadline_ms=10.0, deadline_ms=10_000.0)
+    by = {r.uid: r for r in eng.run()}
+    assert by[u2].error_kind == ERR_DEADLINE and "ttft" in by[u2].error
+    assert by[u1].error is None
+
+
+def test_deadline_racing_same_step_preemption(model_params):
+    """Interleaving: the clock fault expires a request in the same step
+    the scheduler preempts it (deadline watchdog runs after schedule()).
+    The watchdog must win cleanly: the seq is torn out of waiting, its
+    retracted plan leaves no dangling work, nothing leaks."""
+    model, params = model_params
+    # tiny pool: two long-decode requests fight over blocks, so
+    # preemptions fire constantly; give the newer request (the usual
+    # victim) a deadline that expires mid-run
+    probe = Engine(model, params, max_slots=2, max_seq=64, page_size=4,
+                   n_pages=6, prefill_chunk_tokens=8)
+    pr = _prompts(sizes=(10, 10), seed=3)
+    for p_ in pr:
+        probe.submit(p_, max_new_tokens=10, temperature=0.0)
+    probe.run()
+    pre_steps = [i + 1 for i, e in enumerate(probe.plan_log)
+                 if e["preempted"]]
+    assert pre_steps, "pool must be tight enough to preempt"
+    step = pre_steps[0]
+
+    clk = SimClock()
+    p = FaultPlan().advance_clock(step=step, ms=1000.0)
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=4,
+                 n_pages=6, prefill_chunk_tokens=8, faults=p, clock=clk)
+    uids = [eng.submit(p_, max_new_tokens=10, temperature=0.0,
+                       deadline_ms=500.0) for p_ in pr]
+    by = {r.uid: r for r in eng.run()}
+    assert sorted(by) == sorted(uids), "requests lost or duplicated"
+    assert all(r.error_kind == ERR_DEADLINE for r in by.values())
+    eng.pager.debug_check()
+    assert all(rc == 0 for rc in eng.pager.refcount)
+    assert eng.pager.n_free() == eng.pager.cfg.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# allocator audit: detect, quarantine, repair, bounded blast radius
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("flavor", ["refcount", "free_dup"])
+def test_audit_recovers_corruption_failing_only_leaseholder(
+        model_params, baseline, flavor):
+    model, params = model_params
+    p = FaultPlan().corrupt_pages(step=3, uid=1, flavor=flavor)
+    eng, by = _serve(model, params, faults=p, clock=SimClock(),
+                     audit_interval=1)
+    assert by[1].error_kind == ERR_AUDIT
+    assert eng.metrics["audit_repairs"] == 1
+    assert {u: r.output for u, r in by.items() if u != 1} \
+        == {u: o for u, o in baseline.items() if u != 1}
+    eng.pager.debug_check()              # audit() clean again
+    assert all(rc == 0 for rc in eng.pager.refcount)
+    assert eng.pager.n_free() == eng.pager.cfg.n_blocks
+
+
+def test_index_corruption_repairs_without_failing_anyone(model_params,
+                                                         baseline):
+    """A repointed prefix-index entry corrupts no leased content — the
+    audit drops the stale entry (and the orphaned registration) and
+    nobody's request fails."""
+    model, params = model_params
+    p = FaultPlan().corrupt_pages(step=4, flavor="index")
+    eng, by = _serve(model, params, faults=p, clock=SimClock(),
+                     audit_interval=1)
+    assert {u: r.output for u, r in by.items()} == baseline
+    assert eng.metrics["requests_failed"] == 0
+    assert eng.metrics["audit_repairs"] == 1
+    eng.pager.debug_check()
+
+
+def test_audit_detects_without_repair_and_repairs_on_demand(model_params):
+    """Direct allocator-level check: audit(repair=False) reports without
+    mutating; audit(repair=True) rebuilds to a clean pool."""
+    from repro.serving.paged_cache import BlockAllocator, PagedConfig
+    a = BlockAllocator(PagedConfig(n_layers=1, n_kv_heads=1, head_dim=4,
+                                   block_size=4, n_blocks=8, max_slots=2,
+                                   max_blocks_per_seq=4))
+    a.ensure(0, 8)                        # slot 0 leases 2 blocks
+    bid = a.owned[0][-1]
+    a.refcount[bid] += 1                  # corrupt: refcount != leases
+    a.free.append(a.owned[0][0])          # corrupt: leased block on free
+    rep = a.audit(repair=False)
+    assert not rep.clean and not rep.repaired
+    assert set(rep.corrupted_blocks) == set(a.owned[0])
+    assert rep.victim_slots == [0]
+    rep2 = a.audit(repair=True)
+    assert rep2.repaired
+    # leaseholder teardown is the caller's job; after it the pool is whole
+    a.release(0)
+    a.debug_check()
+    assert a.n_free() == a.cfg.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# stall handling: typed error off, shed + continue on
+# ---------------------------------------------------------------------------
+
+
+def test_injected_stall_sheds_newest_waiter_and_continues(model_params,
+                                                          baseline):
+    model, params = model_params
+    p = FaultPlan().stall(step=1, times=2)
+    eng, by = _serve(model, params, faults=p, clock=SimClock())
+    shed = sorted(u for u, r in by.items() if r.error_kind == ERR_SHED)
+    # nothing admitted before step 1, so both stall steps shed the
+    # newest zero-progress waiters: uids 4 then 3
+    assert shed == [3, 4]
+    assert eng.metrics["shed_requests"] == 2
+    assert eng.metrics["stalls"] == 2
+    assert {u: r.output for u, r in by.items() if u not in shed} \
+        == {u: o for u, o in baseline.items() if u not in shed}
+
+
+def test_scheduler_stall_raises_typed_error_with_snapshot(model_params):
+    """Without the fault layer a broken scheduler contract raises
+    SchedulerStall carrying the queue snapshot (not a bare
+    RuntimeError)."""
+    model, params = model_params
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=8)
+    eng.submit(_prompts()[0], max_new_tokens=4, temperature=0.0)
+    # wedge the scheduler: make schedule() return idle plans
+    eng.scheduler.schedule = lambda: StepPlan()
+    with pytest.raises(SchedulerStall) as exc:
+        eng.run()
+    assert isinstance(exc.value, RuntimeError)    # typed subclass
+    assert exc.value.snapshot["waiting"] == [1]
+    assert "no progress" in str(exc.value)
+
+
+def test_stall_with_nothing_to_shed_raises_after_bounded_retries(
+        model_params):
+    model, params = model_params
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=8,
+                 faults=FaultPlan(), clock=SimClock(), stall_shed_limit=2)
+    eng.submit(_prompts()[0], max_new_tokens=4, temperature=0.0)
+    eng.scheduler.schedule = lambda: StepPlan()
+    # shedding would drain the queue and end the loop cleanly; forbid it
+    # too, so the stall is a genuine wedge
+    eng.scheduler.shed_load = lambda k=1: []
+    with pytest.raises(SchedulerStall):
+        eng.run()
+    assert eng.metrics["stalls"] == eng.stall_shed_limit + 1
+
+
+# ---------------------------------------------------------------------------
+# submit-time validation (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_time_validation_sets_error_immediately(model_params):
+    model, params = model_params
+    eng = Engine(model, params, max_slots=2, max_seq=16, page_size=8,
+                 n_pages=1)
+    ok = _prompts(sizes=(6,))[0]
+    u_empty = eng.submit(np.zeros((0,), np.int32), max_new_tokens=4)
+    u_mnt = eng.submit(ok, max_new_tokens=16)
+    u_ns = eng.submit(ok, max_new_tokens=4, n_samples=0)
+    u_wide = eng.submit(ok, max_new_tokens=4, n_samples=3)
+    u_big = eng.submit(_prompts(sizes=(12,))[0], max_new_tokens=2)
+    # errors are set at submit, before any run()
+    reqs = {r.uid: r for r in eng._rejected}
+    assert reqs[u_empty].error == "empty prompt"
+    assert "max_new_tokens" in reqs[u_mnt].error
+    assert "n_samples" in reqs[u_ns].error
+    assert "max_slots" in reqs[u_wide].error
+    assert "blocks" in reqs[u_big].error
+    assert all(r.error_kind in (ERR_INVALID, ERR_CAPACITY)
+               for r in reqs.values())
+    # and they come back exactly once from run(), which never scheduled
+    done = eng.run()
+    assert sorted(r.uid for r in done) == sorted(reqs)
+    assert eng.plan_log == []
+    assert eng.metrics["requests_rejected"] == 5
+
+    dense = Engine(model, params, max_slots=4, max_seq=64,
+                   cache_kind="dense")
+    dense.submit(ok, max_new_tokens=4, n_samples=2)
+    (r,) = dense.run()
+    assert "paged" in r.error and r.error_kind == ERR_INVALID
+
+
+# ---------------------------------------------------------------------------
+# straggler wiring (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_single_host_record_slow():
+    det = StragglerDetector(n_hosts=1, window=8, threshold=2.0)
+    assert not any(det.record_slow(0, 0.1) for _ in range(6))
+    assert det.record_slow(0, 0.5)        # 5x the rolling median
+    assert not det.record_slow(0, 0.1)    # back to normal
+
+
+def test_slow_steps_metric_counts_latency_faults(model_params):
+    """Injected decode latency (clock jump inside the timing window)
+    shows up as Engine.metrics['slow_steps'] via the StragglerDetector.
+    A steady 10 ms baseline warms the rolling median (the detector needs
+    window/2 = 8 samples), then one 200 ms spike flags."""
+    model, params = model_params
+    p = (FaultPlan()
+         .advance_clock(step=1, ms=10.0, site="decode", times=10**6)
+         .advance_clock(step=20, ms=200.0, site="decode", times=1))
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=16, faults=p, clock=SimClock(),
+                 eos_id=-1)     # never stop early: the spike step must run
+    eng.submit(_prompts(sizes=(6,))[0], max_new_tokens=24,
+               temperature=1.0, seed=100)
+    (r,) = eng.run()
+    assert r.error is None
+    assert eng.metrics["slow_steps"] >= 1
+    assert eng.metrics["deadline_misses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# fault x feature interleavings (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_fault_during_chunked_prefill_of_warm_group(model_params):
+    """Step-failure during the chunked prefill of a sampling group whose
+    prompt prefix is cache-warm: the group dies as a unit pre-fanout,
+    the warm blocks stay cached, and an identical resubmission still
+    gets its prefix hit and completes."""
+    model, params = model_params
+    prompt = _prompts(sizes=(28,), seed=5)[0]    # 3 full blocks + tail
+    eng = Engine(model, params, max_slots=4, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=8,
+                 faults=FaultPlan().step_exception(step=2, uid=2,
+                                                   site="prefill",
+                                                   times=10**6),
+                 clock=SimClock())
+    # warm the prefix with a singleton...
+    eng.submit(prompt, max_new_tokens=2, temperature=0.0)
+    done = eng.run()
+    assert done[0].error is None
+    # ...then a group over the same prompt: admission maps the cached
+    # prefix, and its remaining prefill chunk hits the persistent fault
+    eng.submit(prompt, max_new_tokens=4, temperature=1.0, seed=9,
+               n_samples=3)
+    (r,) = eng.run()
+    assert r.error_kind == ERR_FAULT
+    assert eng.plan_log[-1]["cached"] or \
+        any(e["cached"] for e in eng.plan_log), "prefix must be warm"
+    eng.pager.debug_check()
+    assert all(rc == 0 for rc in eng.pager.refcount)
+    # cached prefix blocks survived the failure (they predate it)
+    eng2_hits = eng.scheduler.prefix_stats["hits"]
+    eng.submit(prompt, max_new_tokens=2, temperature=0.0)
+    (r3,) = eng.run()
+    assert r3.error is None
+    assert eng.scheduler.prefix_stats["hits"] == eng2_hits + 1
+
+
+def test_thrash_shedding_bounds_preemption_storms(model_params):
+    """shed_after_preempts: consecutive preempting steps shed the
+    newest zero-progress waiter instead of thrashing forever."""
+    model, params = model_params
+    eng = Engine(model, params, max_slots=2, max_seq=64, page_size=4,
+                 n_pages=6, prefill_chunk_tokens=8,
+                 faults=FaultPlan(), clock=SimClock(),
+                 shed_after_preempts=2)
+    for p_ in _prompts(sizes=(10, 10, 10), seed=3):
+        eng.submit(p_, max_new_tokens=12, temperature=0.0)
+    by = {r.uid: r for r in eng.run()}
+    assert len(by) == 3
+    finished = [u for u, r in by.items() if r.error is None]
+    assert finished, "someone must finish"
+    shed = [u for u, r in by.items() if r.error_kind == ERR_SHED]
+    if shed:      # pool pressure is traffic-dependent; leak-freedom isn't
+        assert eng.metrics["shed_requests"] == len(shed)
+    eng.pager.debug_check()
+    assert all(rc == 0 for rc in eng.pager.refcount)
