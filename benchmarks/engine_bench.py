@@ -27,6 +27,13 @@ exercise the scheduler subsystem end to end:
     count of the chunk step (must stay at ``compile_bound`` = one per
     pool key — CI fails above it), the legacy shape-key count it
     *would* have compiled, and TTFT p50/p99 for the churny traffic,
+  * **long_context** — three 512–1024-token prompts chunk-prefilled on
+    a 16-token-block pool: reports the prefix K/V bytes the
+    chunk-attention step reads (live tiles through the page table)
+    against the legacy full-extent-gather baseline (CI fails if the
+    saving is zero), the chunk step's compile count against the
+    one-per-pool-key bound, and a whole-prompt bitwise-identity probe
+    through the fused Pallas kernel in interpret mode,
   * **fault_tolerance** — the same traffic served fault-free, with the
     fault layer enabled-but-idle, and under a seeded FaultPlan hitting
     one request per fault class: reports goodput (surviving tokens),
@@ -79,6 +86,16 @@ SC_COMPILE_BOUND = 1         # executables per pool key (docs/BENCHMARKS.md)
 # ample pool; a seeded FaultPlan implicates one request per fault class
 FT_PROMPT_LENS = (8, 20, 12, 24, 10, 16, 14)   # last one is the group
 FT_MAX_NEW = 12
+
+# long-context workload: few LONG prompts on a small-block pool — the
+# regime where chunked prefill's prefix read dominates HBM traffic (each
+# chunk re-reads its whole prefix); charts prefix_attn_bytes (live tiles
+# through the page table) against the legacy full-extent gather baseline
+LC_PROMPT_LENS = (512, 768, 1024)
+LC_CHUNK_TOKENS = 64
+LC_PAGE_SIZE = 16
+LC_MAX_NEW = 4
+LC_COMPILE_BOUND = 1         # same per-pool-key bound as shape_churn
 
 
 def _build_model():
@@ -329,6 +346,119 @@ def run_shape_churn(model, params, quiet: bool = False,
     return result
 
 
+def run_long_context(model, params, quiet: bool = False) -> dict:
+    """Serve LC_PROMPT_LENS (512–1024 token prompts) through 64-token
+    chunks on a 16-token-block pool and report what the fused paged
+    prefix read buys: ``prefix_attn_bytes`` (bytes the chunk-attention
+    step actually touches — live tiles through the page table) vs
+    ``prefix_attn_bytes_gather`` (the legacy ``max_blocks × block_size``
+    materialized-gather extent), alongside TTFT p50/p99 and decode
+    tok/s.  CI fails if the saving hits zero, if the chunk step's
+    compile count exceeds the one-per-pool-key bound, or if the
+    whole-prompt bitwise-identity probe (single chunk through the FUSED
+    kernel, interpret mode, vs one-shot ``prefill``) regresses."""
+    import os
+
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in LC_PROMPT_LENS]
+    max_seq = 1088                     # longest prompt + decode headroom
+
+    # serve with the FUSED path enabled (Pallas interpret mode — the
+    # kernel genuinely executes on CPU), so prefix_attn_bytes and the
+    # compile count describe the fused kernel, not the jnp oracle
+    prev = os.environ.get("REPRO_FUSED_PREFILL")
+    os.environ["REPRO_FUSED_PREFILL"] = "interpret"
+    try:
+        fused_mode = transformer.prefill_fused_mode()
+        eng = Engine(model, params, max_slots=2, max_seq=max_seq,
+                     page_size=LC_PAGE_SIZE,
+                     prefill_chunk_tokens=LC_CHUNK_TOKENS,
+                     prefix_caching=False)
+        compiles0 = eng.prefill_compile_count()
+        uids = [eng.submit(p, max_new_tokens=LC_MAX_NEW, temperature=0.0)
+                for p in prompts]
+        done = {r.uid: r for r in eng.run()}
+        assert all(done[u].error is None for u in uids), \
+            [done[u].error for u in uids if done[u].error is not None]
+        compiles = eng.prefill_compile_count() - compiles0
+
+        # whole-prompt bit-identity probe through the FUSED kernel: one
+        # 64-token prompt as a single natural-extent chunk vs one-shot
+        # prefill.  The contract is stated for f32 compute + f32 pools
+        # (the bench model is quantized/bf16, where even the oracle path
+        # carries a cast), so probe a small f32 build of the same config.
+        import jax
+
+        from repro.configs import get_config, reduced
+        from repro.models import build_model
+        f32m = build_model(reduced(get_config("llama2-110m")).with_(
+            compute_dtype="float32"))
+        f32p = f32m.init(jax.random.PRNGKey(0))
+        probe = rng.integers(4, 500, size=LC_CHUNK_TOKENS).astype(np.int32)
+        l_one, _ = f32m.prefill(f32p, {"tokens": jnp.asarray(probe)[None]},
+                                max_seq=LC_CHUNK_TOKENS)
+        nblk = LC_CHUNK_TOKENS // LC_PAGE_SIZE
+        cache = f32m.init_paged_cache(1, block_size=LC_PAGE_SIZE,
+                                      n_blocks=nblk + 1,
+                                      max_blocks_per_seq=nblk)
+        cache["page_table"] = jnp.asarray(
+            np.arange(nblk, dtype=np.int32)[None])
+        l_chunk, _ = f32m.prefill_chunk(f32p, jnp.asarray(probe),
+                                        cache, 0, 0)
+    finally:
+        if prev is None:
+            del os.environ["REPRO_FUSED_PREFILL"]
+        else:
+            os.environ["REPRO_FUSED_PREFILL"] = prev
+    ttft = np.array([done[u].t_first_token - done[u].t_enqueue
+                     for u in uids]) * 1e3
+    saved = (eng.metrics["prefix_attn_bytes_gather"]
+             - eng.metrics["prefix_attn_bytes"])
+    bitexact = bool(np.array_equal(np.asarray(l_chunk),
+                                   np.asarray(l_one)))
+
+    result = {
+        "requests": len(prompts),
+        "prompt_lens": list(LC_PROMPT_LENS),
+        "prefill_chunk_tokens": LC_CHUNK_TOKENS,
+        "page_size": LC_PAGE_SIZE,
+        "max_new_tokens": LC_MAX_NEW,
+        "ttft_ms_p50": float(np.percentile(ttft, 50)),
+        "ttft_ms_p99": float(np.percentile(ttft, 99)),
+        "decode_tok_s": eng.throughput_tok_s(),
+        "prefill_chunks": eng.metrics["prefill_chunks"],
+        "chunk_batch_calls": eng.metrics["chunk_batch_calls"],
+        "prefix_attn_bytes": eng.metrics["prefix_attn_bytes"],
+        "prefix_attn_bytes_gather":
+            eng.metrics["prefix_attn_bytes_gather"],
+        "prefix_attn_bytes_saved": saved,
+        "prefix_bytes_saved_frac":
+            saved / max(eng.metrics["prefix_attn_bytes_gather"], 1),
+        "prefill_compiles": compiles,
+        "compile_bound": LC_COMPILE_BOUND,
+        "fused_mode": fused_mode,
+        "whole_prompt_bitexact": bitexact,
+    }
+    if not quiet:
+        print(f"enginebench/long_context_prefix_bytes_saved,{saved},bytes"
+              f" ({result['prefix_bytes_saved_frac']:.0%} of the"
+              f" {result['prefix_attn_bytes_gather']}-byte gather"
+              f" baseline; mode {result['fused_mode']})")
+        print(f"enginebench/long_context_ttft_ms_p50,"
+              f"{result['ttft_ms_p50']:.1f},ms"
+              f" (p99 {result['ttft_ms_p99']:.1f})")
+        print(f"enginebench/long_context_bitexact,"
+              f"{int(bitexact)},bool (whole-prompt chunk via fused"
+              f" kernel vs one-shot prefill)")
+    return result
+
+
 def run_fault_tolerance(model, params, quiet: bool = False) -> dict:
     """Serve FT_PROMPT_LENS (6 singletons + one n_samples=2 group) three
     times and report the fault layer's acceptance bars:
@@ -491,6 +621,7 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     result["parallel_sampling"] = run_parallel_sampling(model, params,
                                                         quiet=quiet)
     result["shape_churn"] = run_shape_churn(model, params, quiet=quiet)
+    result["long_context"] = run_long_context(model, params, quiet=quiet)
     result["fault_tolerance"] = run_fault_tolerance(model, params,
                                                     quiet=quiet)
     with open(json_path, "w") as fh:

@@ -64,6 +64,14 @@ print(f"  shape churn: compiles={sc['prefill_compiles']} "
       f"(bound {sc['compile_bound']}, legacy keys "
       f"{sc['legacy_shape_keys']}) ttft_ms_p50={sc['ttft_ms_p50']:.1f} "
       f"p99={sc['ttft_ms_p99']:.1f}")
+lc = bench["long_context"]
+print(f"  long context: prefix_attn_bytes={lc['prefix_attn_bytes']} "
+      f"gather={lc['prefix_attn_bytes_gather']} "
+      f"saved={lc['prefix_attn_bytes_saved']} "
+      f"({lc['prefix_bytes_saved_frac']:.0%}) "
+      f"compiles={lc['prefill_compiles']} (bound {lc['compile_bound']}) "
+      f"bitexact={lc['whole_prompt_bitexact']} "
+      f"ttft_ms_p50={lc['ttft_ms_p50']:.1f}")
 ft = bench["fault_tolerance"]
 print(f"  fault tolerance: goodput={ft['goodput_fraction']:.2f} "
       f"({ft['goodput_tokens']}/{ft['tokens_total_faultfree']} tokens) "
@@ -97,6 +105,26 @@ if sc["prefill_compiles"] > sc["compile_bound"]:
 if sc["legacy_shape_keys"] <= sc["compile_bound"]:
     sys.exit("FAIL: shape-churn workload produced no shape churn — the "
              "gate is vacuous")
+# Fused-prefix tripwires: the long-context workload serves through the
+# fused paged chunk-attention kernel (interpret mode) — (a) the prefix
+# read must touch strictly fewer bytes than the legacy full-extent
+# gather (zero savings means dead-tile skipping silently broke and
+# long prompts pay O(max_prefix) HBM traffic again); (b) the fused path
+# must hold the same one-executable-per-pool-key bound as the oracle;
+# (c) a whole-prompt single chunk through the kernel must stay
+# bit-identical to one-shot prefill (f32) — the empty-prefix
+# merge-weight contract.
+if lc["prefix_attn_bytes_saved"] <= 0:
+    sys.exit("FAIL: long-context workload saved zero prefix-attention "
+             "bytes vs the materialized-gather baseline — dead-tile "
+             "skipping in the fused prefill kernel is broken")
+if lc["prefill_compiles"] > lc["compile_bound"]:
+    sys.exit(f"FAIL: long-context fused prefill compiled "
+             f"{lc['prefill_compiles']}x (documented bound: "
+             f"{lc['compile_bound']} per pool key)")
+if not lc["whole_prompt_bitexact"]:
+    sys.exit("FAIL: whole-prompt single chunk through the fused kernel "
+             "is no longer bit-identical to one-shot prefill")
 # Fault-isolation tripwires: (a) a fault may fail at most its own
 # request / sampling group — a larger blast radius means isolation
 # regressed into batch-wide failure; (b) a faulted run must drain with

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.quantization import QuantizedTensor, quantize
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.paged_decode_attention import paged_decode_attention_pallas
+from repro.kernels.paged_prefill_attention import paged_prefill_attention_pallas
 from repro.kernels.flash_prefill import flash_prefill_pallas
 from repro.kernels.q4_matmul import q4_matvec_pallas
 from repro.kernels.q8_matmul import q8_matmul_pallas
@@ -167,6 +168,45 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     if return_tile_counts:
         return out[0].reshape(b, h, d), out[1]
     return out.reshape(b, h, d)
+
+
+@partial(jax.jit, static_argnames=("block_q", "return_tile_counts",
+                                   "interpret"))
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, page_table: jax.Array,
+                            pfx_lens: jax.Array, q_lens=None,
+                            ks_pool: Optional[jax.Array] = None,
+                            vs_pool: Optional[jax.Array] = None, *,
+                            block_q: int = 128,
+                            return_tile_counts: bool = False,
+                            interpret: bool = False):
+    """Rectangular-q attention over the paged prefix of a prefill chunk.
+
+    q: (B, C, H, D) already scaled by 1/sqrt(D); k/v_pool:
+    (NB, BS, KVH, D) (int8 when ks/vs_pool (NB, BS, KVH) are given);
+    page_table: (B, MB) int32; pfx_lens/q_lens: (B,) int32 traced data
+    (prefix rows each chunk row attends / valid chunk rows).  Returns the
+    prefix segment's flash state in `layers.attention_chunk_merge`'s
+    ``pfx_state`` layout — out (B, C, H, D) f32, m (B, H, C, 1) f32,
+    l (B, H, C, 1) f32 — plus (B, KVH) live-tile counts when
+    ``return_tile_counts``.  An empty prefix row is exactly
+    (out=0, m=-1e30, l=0), which the merge weights at exactly zero.
+    """
+    b, c, h, d = q.shape
+    kvh = k_pool.shape[2]
+    hq = h // kvh
+    qg = q.reshape(b, c, kvh, hq, d)
+    bq = _largest_block(c, block_q)
+    outs = paged_prefill_attention_pallas(
+        qg, k_pool, v_pool, page_table, pfx_lens, q_lens, ks_pool, vs_pool,
+        block_q=bq, return_tile_counts=return_tile_counts,
+        interpret=interpret)
+    out = outs[0].reshape(b, c, h, d)
+    m = jnp.moveaxis(outs[1].reshape(b, c, h), 1, 2)[..., None]
+    l = jnp.moveaxis(outs[2].reshape(b, c, h), 1, 2)[..., None]
+    if return_tile_counts:
+        return out, m, l, outs[3]
+    return out, m, l
 
 
 @partial(jax.jit, static_argnames=("causal", "interpret",

@@ -113,3 +113,40 @@ def ref_flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
         scores = jnp.where(mask[None, None], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+def ref_paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, page_table: jax.Array,
+                                pfx_lens: jax.Array, ks_pool=None,
+                                vs_pool=None):
+    """Gather-then-dense oracle for the paged *prefix* segment of chunked
+    prefill (the `paged_prefill_attention` kernel).
+
+    q: (B, C, H, D) pre-scaled by 1/sqrt(D); k/v_pool: (NB, BS, KVH, D);
+    page_table: (B, MB) int32 (-1 = unassigned); pfx_lens: (B,) int32 —
+    row b attends pool positions < pfx_lens[b].  Returns the segment's
+    flash state in the merge layout: out (B, C, H, D), m (B, H, C, 1),
+    l (B, H, C, 1), all f32.  Flash convention: masked keys carry zero
+    probability mass, so an empty prefix yields exactly
+    (out=0, m=-1e30, l=0) — the state that merges with weight zero in
+    ``layers.attention_chunk_merge``.
+    """
+    nb, bs, kvh, d = k_pool.shape
+    b, mb = page_table.shape
+    h = q.shape[2]
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe].reshape(b, mb * bs, kvh, d).astype(jnp.float32)
+    v = v_pool[safe].reshape(b, mb * bs, kvh, d).astype(jnp.float32)
+    if ks_pool is not None:
+        k = k * ks_pool[safe].reshape(b, mb * bs, kvh)[..., None]
+        v = v * vs_pool[safe].reshape(b, mb * bs, kvh)[..., None]
+    kr = jnp.repeat(k, h // kvh, axis=2)
+    vr = jnp.repeat(v, h // kvh, axis=2)
+    scores = jnp.einsum("bchd,bshd->bhcs", q.astype(jnp.float32), kr)
+    valid = jnp.arange(mb * bs)[None] < pfx_lens.reshape(b)[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.where(valid[:, None, None, :], jnp.exp(scores - m), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bhcs,bshd->bchd", e / jnp.where(l > 0, l, 1.0), vr)
+    return out, m, l

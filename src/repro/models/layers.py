@@ -162,7 +162,7 @@ def attention_scores_blockwise(q, k, v, cfg: AttnConfig,
 
 def attention_chunk_merge(q, k_pfx, v_pfx, k_chunk, v_chunk,
                           cfg: AttnConfig, q_pos, pfx_valid,
-                          chunk_valid) -> jax.Array:
+                          chunk_valid, pfx_state=None) -> jax.Array:
     """Shape-stable chunked-prefill attention: a fixed-extent *prefix*
     segment merged with the chunk's own keys by exact softmax
     renormalization.
@@ -198,9 +198,16 @@ def attention_chunk_merge(q, k_pfx, v_pfx, k_chunk, v_chunk,
     match a concatenated-key reference to last-ulp tolerance rather
     than bitwise — the same tolerance class multi-chunk prefill already
     carries vs one-shot.
+
+    ``pfx_state`` replaces the gathered prefix segment with a
+    pre-computed flash state ``(out_p, m_p, l_p)`` — out_p (B, C, H, D),
+    m_p/l_p (B, H, C, 1), the layout `kernels.ops.paged_prefill_attention`
+    returns — and ``k_pfx``/``v_pfx``/``pfx_valid`` may then be None.
+    The merge arithmetic is identical either way, and the empty-prefix
+    state (out=0, m=-1e30, l=0) reproduces the exact ``w_c == 1.0``
+    bit-identity above, so the fused kernel inherits both contracts.
     """
     b, c, h, d = q.shape
-    p_len = k_pfx.shape[1]
     kvh = cfg.n_kv_heads
     hq = h // kvh
     qc = min(cfg.q_chunk, c)
@@ -210,10 +217,12 @@ def attention_chunk_merge(q, k_pfx, v_pfx, k_chunk, v_chunk,
 
     kgc = jnp.repeat(k_chunk, hq, axis=2).astype(q.dtype)   # (B, C, H, D)
     vgc = jnp.repeat(v_chunk, hq, axis=2).astype(q.dtype)
-    kgp = jnp.repeat(k_pfx, hq, axis=2).astype(q.dtype)     # (B, P, H, D)
-    vgp = jnp.repeat(v_pfx, hq, axis=2).astype(q.dtype)
+    if pfx_state is None:
+        p_len = k_pfx.shape[1]
+        kgp = jnp.repeat(k_pfx, hq, axis=2).astype(q.dtype)  # (B, P, H, D)
+        vgp = jnp.repeat(v_pfx, hq, axis=2).astype(q.dtype)
+        k_pos_p = jnp.arange(p_len, dtype=jnp.int32)[None]   # pool rows
     k_pos_c = q_pos                                          # chunk keys
-    k_pos_p = jnp.arange(p_len, dtype=jnp.int32)[None]       # pool rows
     qg = q.reshape(b, n_chunks, qc, h, d)
     qp = q_pos.reshape(b, n_chunks, qc)
 
@@ -235,26 +244,46 @@ def attention_chunk_merge(q, k_pfx, v_pfx, k_chunk, v_chunk,
         out = jnp.einsum("bhqt,bthd->bqhd", p.astype(q.dtype), vg)
         return out, m, l
 
-    @jax.checkpoint
-    def chunk_fn(carry, inputs):
-        qi, qpos = inputs                               # (B,qc,H,D), (B,qc)
-        out_c, m_c, l_c = segment(qi, qpos, kgc, vgc, k_pos_c, chunk_valid,
-                                  cfg.causal)
-        # prefix keys sit strictly below every live query position, so
-        # validity already implies causality; the window (if any) still
-        # applies
-        out_p, m_p, l_p = segment(qi, qpos, kgp, vgp, k_pos_p, pfx_valid,
-                                  False)
+    def merge(out_c, m_c, l_c, out_p, m_p, l_p):
         m = jnp.maximum(m_p, m_c)
         a_p = jnp.exp(m_p - m) * l_p
         a_c = jnp.exp(m_c - m) * l_c
         l = a_p + a_c
         w_p = jnp.moveaxis(a_p / l, 1, 2)               # (B, qc, H, 1)
         w_c = jnp.moveaxis(a_c / l, 1, 2)
-        return carry, w_p * out_p + w_c * out_c
+        return w_p * out_p + w_c * out_c
 
-    _, outs = lax.scan(chunk_fn, None,
-                       (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    if pfx_state is None:
+        @jax.checkpoint
+        def chunk_fn(carry, inputs):
+            qi, qpos = inputs                           # (B,qc,H,D), (B,qc)
+            out_c, m_c, l_c = segment(qi, qpos, kgc, vgc, k_pos_c,
+                                      chunk_valid, cfg.causal)
+            # prefix keys sit strictly below every live query position, so
+            # validity already implies causality; the window (if any) still
+            # applies
+            out_p, m_p, l_p = segment(qi, qpos, kgp, vgp, k_pos_p,
+                                      pfx_valid, False)
+            return carry, merge(out_c, m_c, l_c, out_p, m_p, l_p)
+
+        xs = (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0))
+    else:
+        out_p_all, m_p_all, l_p_all = pfx_state
+        # slice the precomputed state to the same per-q-chunk scan layout
+        op = jnp.moveaxis(out_p_all.reshape(b, n_chunks, qc, h, d), 1, 0)
+        mp = jnp.moveaxis(m_p_all.reshape(b, h, n_chunks, qc, 1), 2, 0)
+        lp = jnp.moveaxis(l_p_all.reshape(b, h, n_chunks, qc, 1), 2, 0)
+
+        @jax.checkpoint
+        def chunk_fn(carry, inputs):
+            qi, qpos, out_p, m_p, l_p = inputs
+            out_c, m_c, l_c = segment(qi, qpos, kgc, vgc, k_pos_c,
+                                      chunk_valid, cfg.causal)
+            return carry, merge(out_c, m_c, l_c, out_p, m_p, l_p)
+
+        xs = (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0), op, mp, lp)
+
+    _, outs = lax.scan(chunk_fn, None, xs)
     return jnp.moveaxis(outs, 0, 1).reshape(b, c, h, d)
 
 

@@ -15,6 +15,7 @@ One functional model, driven entirely by ``ModelConfig``:
 from __future__ import annotations
 
 import functools
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -954,30 +955,61 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
     pt = np.asarray(cache["page_table"] if page_table is None
                     else page_table)
     mb = pt.shape[1]
-    chunk_blk = np.full((b, c), nb, np.int32)
-    chunk_off = np.zeros((b, c), np.int32)
-    pt_rows = np.zeros((b, mb), np.int32)
-    for i in range(b):
-        if not valid[i] or lens[i] <= 0:
-            continue
-        row = pt[slots[i]]
-        gpos = np.arange(offs[i], offs[i] + lens[i])
-        if np.any(row[gpos // bs] < 0):
-            raise ValueError(f"slot {slots[i]} page table does not cover "
-                             f"rows [{offs[i]}, {offs[i] + lens[i]}) — "
-                             "allocate blocks before prefill_chunk")
-        chunk_blk[i, :lens[i]] = row[gpos // bs]
-        chunk_off[i, :lens[i]] = gpos % bs
-        pt_rows[i] = np.maximum(row, 0)     # -1 -> 0; masked by pos anyway
+    # vectorized over rows — this runs on the host critical path every
+    # step and used to be a Python loop scaling with max_slots
+    live_row = valid & (lens > 0)                       # rows that write
+    rows = pt[np.where(live_row, slots, 0)]             # (b, mb)
+    gpos = offs[:, None] + np.arange(c, dtype=np.int32)[None]     # (b, c)
+    in_len = np.arange(c, dtype=np.int32)[None] < lens[:, None]   # (b, c)
+    row_blk = np.take_along_axis(rows, np.minimum(gpos // bs, mb - 1),
+                                 axis=1)                # (b, c)
+    mask = in_len & live_row[:, None]
+    bad = ((row_blk < 0) | (gpos >= mb * bs)) & mask
+    if bad.any():
+        i = int(np.argmax(bad.any(axis=1)))
+        raise ValueError(f"slot {slots[i]} page table does not cover "
+                         f"rows [{offs[i]}, {offs[i] + lens[i]}) — "
+                         "allocate blocks before prefill_chunk")
+    chunk_blk = np.where(mask, row_blk, nb).astype(np.int32)
+    chunk_off = np.where(mask, gpos % bs, 0).astype(np.int32)
+    pt_rows = np.where(live_row[:, None],               # -1 -> 0; masked
+                       np.maximum(rows, 0), 0).astype(np.int32)
     safe_slots = np.where(valid, slots, max_slots)     # OOB -> lens drop
 
-    return _prefill_chunk_fn(cfg)(params, cache, toks,
-                                  jnp.asarray(chunk_blk),
-                                  jnp.asarray(chunk_off),
-                                  jnp.asarray(pt_rows),
-                                  jnp.asarray(safe_slots),
-                                  jnp.asarray(offs),
-                                  jnp.asarray(np.where(valid, lens, 0)))
+    return _prefill_chunk_fn(cfg, prefill_fused_mode())(
+        params, cache, toks,
+        jnp.asarray(chunk_blk),
+        jnp.asarray(chunk_off),
+        jnp.asarray(pt_rows),
+        jnp.asarray(safe_slots),
+        jnp.asarray(offs),
+        jnp.asarray(np.where(valid, lens, 0)))
+
+
+def prefill_fused_mode() -> str:
+    """Which prefix-attention path chunked prefill uses.
+
+    ``"kernel"`` runs the fused Pallas kernel
+    (`kernels.paged_prefill_attention`): the prefix is read through the
+    page table inside the kernel's index_map — O(prefix) live tiles, no
+    materialized gather.  ``"oracle"`` keeps the jnp gather +
+    `layers.attention_chunk_merge` reference.  ``"interpret"`` is the
+    kernel in Pallas interpret mode (CPU-executable — what the parity
+    tests and the bench's bit-identity probe run).
+
+    Policy: the ``REPRO_FUSED_PREFILL`` env var (kernel/oracle/interpret,
+    with on/1 and off/0 aliases) wins; default is the kernel on real TPU
+    backends and the oracle elsewhere — the same dispatch rule as the
+    decode kernels, so CPU test/bench numerics are unchanged by default.
+    """
+    v = os.environ.get("REPRO_FUSED_PREFILL", "").strip().lower()
+    if v in ("kernel", "on", "1", "true"):
+        return "kernel"
+    if v in ("oracle", "off", "0", "false"):
+        return "oracle"
+    if v == "interpret":
+        return "interpret"
+    return "kernel" if jax.default_backend() == "tpu" else "oracle"
 
 
 def prefill_chunk_compiles(cfg: ModelConfig) -> int:
@@ -989,23 +1021,30 @@ def prefill_chunk_compiles(cfg: ModelConfig) -> int:
     engine snapshots it into ``metrics["prefill_compiles"]`` /
     ``plan_log``; tests and the shape-churn benchmark assert it stays at
     one per pool key while traffic churns chunk lengths and offsets."""
-    return _prefill_chunk_fn(cfg)._cache_size()
+    return _prefill_chunk_fn(cfg, prefill_fused_mode())._cache_size()
 
 
 @functools.lru_cache(maxsize=None)
-def _prefill_chunk_fn(cfg: ModelConfig):
-    """Build (once per config) the jitted, cache-donating chunk step.
+def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle"):
+    """Build (once per config + prefix-path mode) the jitted,
+    cache-donating chunk step.
 
     All extents inside are data: ``offs``/``lens`` drive rope, the
     causal mask, key validity, the KV scatter and the ``lens`` update,
-    so the compile key is only the padded shapes.  The prefix is read by
-    gathering each row's whole page-table row and masking keys at
-    positions ``>= offs[row]`` (the kernels/flash_prefill.py Pallas path
-    carries the same offsets via scalar prefetch and skips dead blocks
-    instead of masking a materialized gather)."""
+    so the compile key is only the padded shapes.  The prefix is read
+    either by gathering each row's whole page-table row and masking keys
+    at positions ``>= offs[row]`` (mode "oracle"), or through the fused
+    `kernels.paged_prefill_attention` Pallas kernel whose index_map
+    dereferences the page table under scalar prefetch and skips dead
+    tiles (mode "kernel"/"interpret") — see :func:`prefill_fused_mode`.
+    Either way the per-row offsets/lengths stay traced, so the
+    one-compile-per-pool-key bound holds for both paths."""
     hd = cfg.hd()
     kvh = cfg.n_kv_heads
     int8 = _kv_int8(cfg)
+    fused = mode != "oracle"
+    if fused:
+        from repro.kernels import ops as KO
     acfg = L.AttnConfig(cfg.n_heads, kvh, hd, causal=True,
                         q_chunk=cfg.q_chunk)
 
@@ -1041,20 +1080,35 @@ def _prefill_chunk_fn(cfg: ModelConfig):
                 cos, sin = rope_cs
                 q = L.apply_rope(q, cos[:, :, None], sin[:, :, None])
                 k = L.apply_rope(k, cos[:, :, None], sin[:, :, None])
-            # each row gathers ITS page-table row (shared blocks may
-            # appear in several rows — reads never conflict); dead or
-            # not-yet-written positions are masked via k_valid
-            kp = lc["k"][pt_rows].reshape(b, mb * bs, kvh, hd)
-            vp = lc["v"][pt_rows].reshape(b, mb * bs, kvh, hd)
-            if int8:
-                kp = kp.astype(jnp.float32) * lc["ks"][pt_rows].reshape(
-                    b, mb * bs, kvh)[..., None]
-                vp = vp.astype(jnp.float32) * lc["vs"][pt_rows].reshape(
-                    b, mb * bs, kvh)[..., None]
-            out = L.attention_chunk_merge(q * (hd ** -0.5),
-                                          kp.astype(k.dtype),
-                                          vp.astype(v.dtype), k, v, acfg,
-                                          q_pos, pfx_valid, chunk_valid)
+            if fused:
+                # prefix read through the page table inside the kernel's
+                # index_map: O(offs) live tiles fetched, dead tiles
+                # skipped, int8 dequantized in-kernel
+                pfx_state = KO.paged_prefill_attention(
+                    q * (hd ** -0.5), lc["k"], lc["v"], pt_rows, offs,
+                    lens, lc["ks"] if int8 else None,
+                    lc["vs"] if int8 else None,
+                    interpret=(mode == "interpret"))
+                out = L.attention_chunk_merge(q * (hd ** -0.5), None,
+                                              None, k, v, acfg, q_pos,
+                                              None, chunk_valid,
+                                              pfx_state=pfx_state)
+            else:
+                # each row gathers ITS page-table row (shared blocks may
+                # appear in several rows — reads never conflict); dead or
+                # not-yet-written positions are masked via k_valid
+                kp = lc["k"][pt_rows].reshape(b, mb * bs, kvh, hd)
+                vp = lc["v"][pt_rows].reshape(b, mb * bs, kvh, hd)
+                if int8:
+                    kp = kp.astype(jnp.float32) * lc["ks"][pt_rows].reshape(
+                        b, mb * bs, kvh)[..., None]
+                    vp = vp.astype(jnp.float32) * lc["vs"][pt_rows].reshape(
+                        b, mb * bs, kvh)[..., None]
+                out = L.attention_chunk_merge(q * (hd ** -0.5),
+                                              kp.astype(k.dtype),
+                                              vp.astype(v.dtype), k, v,
+                                              acfg, q_pos, pfx_valid,
+                                              chunk_valid)
             out = qeinsum("bshk,dhk->bsd", out, lp["attn"]["wo"])
             h = h + out.astype(h.dtype)
             h = h + _mlp_or_moe(lp, h, cfg)

@@ -302,6 +302,11 @@ class Engine:
                         "blocks_live_peak": 0,
                         "blocks_saved_by_sharing_peak": 0,
                         "prefill_compiles": 0,
+                        # roofline accounting: prefix K/V bytes the
+                        # chunk-attention step reads — live tiles through
+                        # the page table vs the legacy full-extent gather
+                        "prefix_attn_bytes": 0,
+                        "prefix_attn_bytes_gather": 0,
                         # fault-domain counters
                         "step_retries": 0, "requests_failed": 0,
                         "requests_rejected": 0, "nan_rows": 0,
@@ -646,6 +651,28 @@ class Engine:
                 for req in victims.values()]
 
     # -- internals ------------------------------------------------------
+    def _account_prefix_bytes(self, offs: np.ndarray,
+                              lens: np.ndarray) -> None:
+        """Roofline estimate of the prefix K/V traffic one chunk step
+        reads, per layer and row: the fused kernel fetches
+        ``ceil(prefix/block_size)`` live tiles through the page table
+        (dead tiles are index_map-clamped revisits — no DMA), where the
+        legacy path gathered every row's full ``max_blocks × block_size``
+        extent.  Both go into ``metrics`` so BENCH_engine.json can chart
+        bytes actually touched vs the gather baseline."""
+        _, _, bs, kvh, hd = self.cache["attn"]["k"].shape
+        mb = self.pager.cfg.max_blocks_per_seq
+        n_layers = self.model.cfg.n_layers
+        per_pos = 2 * kvh * hd * self.cache["attn"]["k"].dtype.itemsize
+        if "ks" in self.cache["attn"]:
+            per_pos += 2 * kvh * 4               # f32 dequant scales
+        live = lens > 0
+        live_tiles = int((-(-offs[live] // bs)).sum())
+        self.metrics["prefix_attn_bytes"] += (
+            live_tiles * bs * per_pos * n_layers)
+        self.metrics["prefix_attn_bytes_gather"] += (
+            int(live.sum()) * mb * bs * per_pos * n_layers)
+
     def _run_chunks(self, chunks: List[PrefillChunk]) -> List[Request]:
         """Execute ALL of this step's planned chunks — paged: one
         shape-stable batched ``prefill_chunk_batch`` call, padded to the
@@ -679,6 +706,7 @@ class Engine:
                 self.params, toks, self.cache, slots, offs,
                 page_table=self._host_pt, chunk_lens=lens)
             self.metrics["chunk_batch_calls"] += 1
+            self._account_prefix_bytes(offs, lens)
             if self.faults is not None:
                 row_uids = [c.seq.req.uid for c in chunks]
                 logits = self.faults.corrupt_logits(

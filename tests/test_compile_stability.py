@@ -352,3 +352,112 @@ def test_flash_prefill_one_compile_across_offsets():
                           interpret=True)
     assert ops.flash_prefill._cache_size() == c0, \
         "q_offset/q_lens/k_lens leaked into the compile key"
+
+
+# ---------------------------------------------------------------------------
+# fused paged prefix kernel path (REPRO_FUSED_PREFILL)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_prefill_matches_oracle_and_compiles_once(monkeypatch):
+    """The fused kernel path (interpret mode — the Pallas kernel really
+    executes) vs the jnp gather oracle over the SAME padded batched
+    calls: logits within the reassociation tolerance class, and the
+    fused executable count stays at one per pool key while lengths,
+    offsets and batch composition churn."""
+    from repro.models import transformer
+    m, params = _model()
+    rng = np.random.default_rng(7)
+    ta = rng.integers(4, 500, size=16).astype(np.int32)
+    tb = rng.integers(4, 500, size=11).astype(np.int32)
+
+    def serve():
+        alloc, cache = _paged(m)
+        alloc.ensure(0, 8)
+        cache = _fill(alloc, cache, 2, 11)
+        _, cache = _run_batch(m, params, cache,
+                              [(0, ta[:8], 0), (2, tb, 0)],
+                              pad_rows=4, pad_width=24)
+        cache = _fill(alloc, cache, 0, 16)
+        logits, cache = _run_batch(m, params, cache, [(0, ta[8:], 8)],
+                                   pad_rows=4, pad_width=24)
+        return np.asarray(logits[0])
+
+    monkeypatch.setenv("REPRO_FUSED_PREFILL", "oracle")
+    l_oracle = serve()
+    monkeypatch.setenv("REPRO_FUSED_PREFILL", "interpret")
+    assert transformer.prefill_fused_mode() == "interpret"
+    c0 = transformer.prefill_chunk_compiles(m.cfg)
+    l_fused = serve()
+    np.testing.assert_allclose(l_fused, l_oracle, rtol=1e-5, atol=5e-6)
+
+    # churn lengths/offsets/composition at the same padded extent:
+    # zero fresh fused executables
+    for rows in ([(1, tb[:7], 0)],
+                 [(0, ta[:5], 0), (1, tb[7:], 7)],
+                 [(3, ta[5:9], 0), (0, ta[:8], 0), (2, tb[:6], 0)]):
+        alloc, cache = _paged(m)
+        for slot, t, off in rows:
+            alloc.ensure(slot, off + len(t))
+        cache = dict(cache)
+        cache["page_table"] = jnp.asarray(alloc.page_table())
+        _run_batch(m, params, cache, rows, pad_rows=4, pad_width=24)
+    grew = transformer.prefill_chunk_compiles(m.cfg) - c0
+    assert grew <= 1, \
+        f"fused chunk step compiled {grew}x in one pool key (bound: 1)"
+
+
+def test_fused_prefill_batch_composition_invariance_bitwise(monkeypatch):
+    """Under the fused kernel a valid row's logits and written KV remain
+    BITWISE independent of what else shares the padded batch — the
+    kernel's grid rows share nothing, so the oracle-path invariance
+    carries over exactly."""
+    monkeypatch.setenv("REPRO_FUSED_PREFILL", "interpret")
+    m, params = _model()
+    rng = np.random.default_rng(8)
+    ta = rng.integers(4, 500, size=13).astype(np.int32)
+    tb = rng.integers(4, 500, size=9).astype(np.int32)
+
+    alloc1, cache1 = _paged(m)
+    cache1 = _fill(alloc1, cache1, 0, 13)
+    l_alone, cache1 = _run_batch(m, params, cache1, [(0, ta, 0)],
+                                 pad_rows=4, pad_width=16)
+
+    alloc2, cache2 = _paged(m)
+    alloc2.ensure(0, 13)
+    cache2 = _fill(alloc2, cache2, 2, 9)
+    l_both, cache2 = _run_batch(m, params, cache2,
+                                [(0, ta, 0), (2, tb, 0)],
+                                pad_rows=4, pad_width=16)
+
+    np.testing.assert_array_equal(np.asarray(l_alone[0]),
+                                  np.asarray(l_both[0]))
+    for kk in ("k", "v"):
+        np.testing.assert_array_equal(
+            _pool_rows(cache1, alloc1, 0, 13, kk),
+            _pool_rows(cache2, alloc2, 0, 13, kk))
+
+
+@pytest.mark.parametrize("kv", [None, "int8"])
+def test_fused_whole_prompt_bitexact_vs_oneshot(monkeypatch, kv):
+    """A whole prompt served as ONE natural-extent chunk through the
+    fused kernel is bit-identical to one-shot prefill (f32) — the
+    kernel's empty-prefix state merges with weight exactly zero.  int8
+    pools agree to the oracle tolerance (one-shot uses a float cache, so
+    code-for-code identity is covered by the multi-chunk tests)."""
+    monkeypatch.setenv("REPRO_FUSED_PREFILL", "interpret")
+    m, params = _model(kv)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(4, 500, size=21).astype(np.int32)
+    l_one, _ = m.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                         max_seq=21)
+    alloc, cache = _paged(m)
+    cache = _fill(alloc, cache, 1, 21)
+    l_chunk, _ = m.prefill_chunk(params, jnp.asarray(prompt), cache, 1, 0)
+    if kv is None:
+        np.testing.assert_array_equal(np.asarray(l_chunk),
+                                      np.asarray(l_one))
+    else:
+        np.testing.assert_allclose(np.asarray(l_chunk),
+                                   np.asarray(l_one),
+                                   rtol=1e-4, atol=1e-5)

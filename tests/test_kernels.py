@@ -146,3 +146,142 @@ def test_decode_attention_matches_fp_within_quant_error():
                               absk[..., 0] / 127, absv[..., 0] / 127, **I)
     np.testing.assert_allclose(np.asarray(i8), np.asarray(fp),
                                rtol=0.1, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# paged prefill attention (fused chunked-prefill prefix read)
+# ---------------------------------------------------------------------------
+
+
+def _paged_prefill_case(seed, b, c, kvh, hq, d, bs, mb, offs, lens):
+    """Random pool + a page table whose live prefix blocks are a
+    permutation (shared nothing), with entries past each row's prefix
+    extent left unassigned (-1) — the kernel must never read them."""
+    rng = np.random.default_rng(seed)
+    h = kvh * hq
+    nb = b * mb + 1
+    q = jnp.asarray(rng.standard_normal((b, c, h, d)),
+                    jnp.float32) * d ** -0.5
+    k_pool = jnp.asarray(rng.standard_normal((nb, bs, kvh, d)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((nb, bs, kvh, d)), jnp.float32)
+    ids = rng.permutation(nb - 1)[:b * mb].reshape(b, mb) + 1
+    pt = np.full((b, mb), -1, np.int32)
+    for i in range(b):
+        nlive = -(-int(offs[i]) // bs)
+        pt[i, :nlive] = ids[i, :nlive]
+    return q, k_pool, v_pool, jnp.asarray(pt), \
+        jnp.asarray(offs, dtype=jnp.int32), jnp.asarray(lens,
+                                                        dtype=jnp.int32)
+
+
+@pytest.mark.parametrize("b,c,kvh,hq,d,bs,mb", [
+    (3, 32, 2, 2, 32, 8, 8),     # GQA, prefix crossing block boundaries
+    (2, 48, 1, 4, 32, 16, 6),    # single kv head, wide fanout
+    (4, 16, 4, 1, 64, 8, 12),    # MHA, many small blocks
+])
+def test_paged_prefill_attention_fp(b, c, kvh, hq, d, bs, mb):
+    """Kernel vs gather-then-dense oracle, per-row offsets/lengths:
+    rows cover empty prefix, a prefix ending mid-block, a full-extent
+    prefix, and a zero-length padding row."""
+    offs = np.zeros(b, np.int32)
+    lens = np.full(b, c, np.int32)
+    offs[1] = bs * 2 + 3                 # crosses a block boundary
+    lens[1] = c // 2                     # partial chunk
+    offs[-1] = mb * bs                   # full extent
+    lens[-1] = 0                         # padding row (never compared)
+    q, kp, vp, pt, offs, lens = _paged_prefill_case(
+        0, b, c, kvh, hq, d, bs, mb, offs, lens)
+    out, m, l = ops.paged_prefill_attention(q, kp, vp, pt, offs, lens, **I)
+    ro, rm, rl = ref.ref_paged_prefill_attention(q, kp, vp, pt, offs)
+    out, m, l = np.asarray(out), np.asarray(m), np.asarray(l)
+    ro, rm, rl = np.asarray(ro), np.asarray(rm), np.asarray(rl)
+    for i in range(b):
+        n = int(lens[i])                 # rows past lens are dead tiles
+        np.testing.assert_allclose(out[i, :n], ro[i, :n],
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m[i, :, :n], rm[i, :, :n], rtol=1e-5)
+        np.testing.assert_allclose(l[i, :, :n], rl[i, :, :n],
+                                   rtol=1e-5, atol=1e-6)
+    # empty-prefix rows carry the exact zero-weight merge state
+    assert np.all(out[0] == 0.0) and np.all(l[0] == 0.0)
+    assert np.all(m[0] == -1e30)
+
+
+def test_paged_prefill_attention_int8():
+    """In-kernel dequant via the per-(position, kv-head) scale pools
+    matches the oracle's gather-then-dequant."""
+    b, c, kvh, hq, d, bs, mb = 3, 32, 2, 2, 32, 8, 8
+    offs = np.array([0, 19, mb * bs], np.int32)
+    lens = np.array([c, c - 5, c], np.int32)
+    q, kp, vp, pt, offs, lens = _paged_prefill_case(
+        1, b, c, kvh, hq, d, bs, mb, offs, lens)
+    absk = jnp.max(jnp.abs(kp), -1, keepdims=True)
+    absv = jnp.max(jnp.abs(vp), -1, keepdims=True)
+    kq = jnp.round(kp / absk * 127).astype(jnp.int8)
+    vq = jnp.round(vp / absv * 127).astype(jnp.int8)
+    ks, vs = absk[..., 0] / 127.0, absv[..., 0] / 127.0
+    out, m, l = ops.paged_prefill_attention(q, kq, vq, pt, offs, lens,
+                                            ks, vs, **I)
+    ro, rm, rl = ref.ref_paged_prefill_attention(q, kq, vq, pt, offs,
+                                                 ks, vs)
+    for i in range(b):
+        n = int(lens[i])
+        np.testing.assert_allclose(np.asarray(out)[i, :n],
+                                   np.asarray(ro)[i, :n],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(l)[i, :, :n],
+                                   np.asarray(rl)[i, :, :n],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_paged_prefill_attention_skips_dead_tiles():
+    """The prefetch-driven guard is real: per-(row, kv-head) live-tile
+    counts equal ceil(prefix/block) exactly — tiles past a row's prefix
+    extent (and every tile of an empty-prefix row) never run."""
+    b, c, kvh, hq, d, bs, mb = 3, 32, 2, 2, 32, 8, 8
+    offs = np.array([0, 19, mb * bs], np.int32)
+    lens = np.full(b, c, np.int32)
+    q, kp, vp, pt, offs_j, lens_j = _paged_prefill_case(
+        2, b, c, kvh, hq, d, bs, mb, offs, lens)
+    *_, cnt = ops.paged_prefill_attention(q, kp, vp, pt, offs_j, lens_j,
+                                          return_tile_counts=True, **I)
+    want = np.stack([np.full(kvh, -(-int(o) // bs)) for o in offs])
+    np.testing.assert_array_equal(np.asarray(cnt), want)
+
+
+def test_attention_chunk_merge_accepts_kernel_state():
+    """`attention_chunk_merge(pfx_state=...)` with the kernel's flash
+    state matches the gathered-prefix oracle path — and a zero-offset
+    (empty prefix) batch matches it BITWISE, the whole-prompt identity
+    the serving stack's one-shot contract rides on."""
+    from repro.models.layers import AttnConfig, attention_chunk_merge
+
+    b, c, kvh, hq, d, bs, mb = 2, 24, 2, 2, 32, 8, 6
+    h = kvh * hq
+    rng = np.random.default_rng(5)
+    cfg = AttnConfig(h, kvh, d, causal=True, q_chunk=12)
+    kc = jnp.asarray(rng.standard_normal((b, c, kvh, d)), jnp.float32)
+    vc = jnp.asarray(rng.standard_normal((b, c, kvh, d)), jnp.float32)
+    chunk_valid = jnp.asarray(np.arange(c)[None] < np.array([[c], [c - 7]]))
+
+    for offs_np in (np.array([0, 0], np.int32),      # bitwise case
+                    np.array([11, 37], np.int32)):   # tolerance case
+        q, kp, vp, pt, offs, lens = _paged_prefill_case(
+            6, b, c, kvh, hq, d, bs, mb, offs_np, np.full(b, c, np.int32))
+        q_pos = offs[:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+        pfx_valid = jnp.arange(mb * bs, dtype=jnp.int32)[None] < \
+            offs[:, None]
+        safe = jnp.maximum(pt, 0)
+        kg = kp[safe].reshape(b, mb * bs, kvh, d)
+        vg = vp[safe].reshape(b, mb * bs, kvh, d)
+        want = attention_chunk_merge(q, kg, vg, kc, vc, cfg, q_pos,
+                                     pfx_valid, chunk_valid)
+        state = ops.paged_prefill_attention(q, kp, vp, pt, offs, None, **I)
+        got = attention_chunk_merge(q, None, None, kc, vc, cfg, q_pos,
+                                    None, chunk_valid, pfx_state=state)
+        if int(offs_np.max()) == 0:
+            np.testing.assert_array_equal(np.asarray(got),
+                                          np.asarray(want))
+        else:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-5, atol=1e-6)
