@@ -20,12 +20,11 @@ import json
 from pathlib import Path
 
 from repro.configs import get_config
-from repro.launch.roofline import HBM_BW
+from repro.launch.roofline import HBM_BW, V5E_POWER_W
 from repro.launch import steps as steplib
 from repro.launch.roofline import tree_bytes
 from repro.models import build_model
 
-V5E_POWER_W = 170.0          # chip TDP-class envelope under load
 V5E_IDLE_W = 60.0
 
 

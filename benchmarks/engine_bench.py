@@ -87,6 +87,18 @@ SC_COMPILE_BOUND = 1         # executables per pool key (docs/BENCHMARKS.md)
 FT_PROMPT_LENS = (8, 20, 12, 24, 10, 16, 14)   # last one is the group
 FT_MAX_NEW = 12
 
+# spec-decode workload: greedy requests with repetitive suffixes (the
+# n-gram proposer's sweet spot — prompt-lookup drafts accept whenever
+# the continuation revisits the pattern) mixed with seeded sampled
+# traffic, served draft-then-verify on the fused kernel (interpret mode)
+SD_PATTERN_LEN = 4
+SD_PATTERN_REPS = 5          # 20-token repetitive prompts
+SD_GREEDY = 3
+SD_SAMPLED = 2
+SD_MAX_NEW = 24
+SD_SPEC_TOKENS = 4
+SD_COMPILE_BOUND = 1         # verify executables per pool key
+
 # long-context workload: few LONG prompts on a small-block pool — the
 # regime where chunked prefill's prefix read dominates HBM traffic (each
 # chunk re-reads its whole prefix); charts prefix_attn_bytes (live tiles
@@ -459,6 +471,125 @@ def run_long_context(model, params, quiet: bool = False) -> dict:
     return result
 
 
+def run_spec_decode(model, params, quiet: bool = False) -> dict:
+    """Serve greedy repetitive-suffix prompts (plus seeded sampled
+    traffic) draft-then-verify and report what speculation bought:
+
+      1. non-speculative greedy reference — the streams every gate
+         compares against, and the baseline ``tokens_per_joule``,
+      2. speculative greedy (n-gram proposer, fused kernel in interpret
+         mode) — must be **bit-identical** to run 1 (raises otherwise),
+         with ``steps_per_token`` < 1.0 (fewer per-sequence device steps
+         than emitted tokens: the whole point), ``accept_ratio`` > 0,
+         and the verify entry within its one-per-pool-key compile bound
+         — all CI-gated (ci/run_ci.sh),
+      3. mixed greedy + sampled speculative traffic — the greedy streams
+         must STILL match run 1 (acceptance counts are per-row private;
+         batch composition cannot leak), and the sampled requests
+         exercise per-position keyed acceptance under temperature.
+
+    Energy is the roofline model (launch/roofline.step_joules) fed by
+    the engine's per-call bytes/FLOPs accounting — ``tokens_per_joule``
+    is the paper's headline metric, reported for runs 1 and 2 so the
+    speculation win shows up in tokens/J, not just steps."""
+    import os
+
+    from repro.models import transformer
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(13)
+    n_req = SD_GREEDY + SD_SAMPLED
+    prompts = [np.tile(rng.integers(4, 500,
+                                    size=SD_PATTERN_LEN).astype(np.int32),
+                       SD_PATTERN_REPS) for _ in range(n_req)]
+
+    def mk_engine(spec: bool):
+        return Engine(model, params, max_slots=4, max_seq=96, page_size=8,
+                      prefill_chunk_tokens=32, prefix_caching=False,
+                      spec_tokens=SD_SPEC_TOKENS if spec else 0)
+
+    def serve(eng, idx):
+        uids = [eng.submit(prompts[i], max_new_tokens=SD_MAX_NEW,
+                           temperature=0.0 if i < SD_GREEDY else 1.0,
+                           seed=None if i < SD_GREEDY else 400 + i)
+                for i in idx]
+        done = {r.uid: r for r in eng.run()}
+        assert all(done[u].error is None for u in uids), \
+            [done[u].error for u in uids if done[u].error is not None]
+        return [done[u].output for u in uids]
+
+    greedy_idx = list(range(SD_GREEDY))
+    prev = os.environ.get("REPRO_FUSED_PREFILL")
+    os.environ["REPRO_FUSED_PREFILL"] = "interpret"
+    try:
+        fused_mode = transformer.prefill_fused_mode()
+        eng0 = mk_engine(False)                    # 1: reference
+        base = serve(eng0, greedy_idx)
+        eng1 = mk_engine(True)                     # 2: speculative greedy
+        compiles0 = eng1.verify_compile_count()
+        spec = serve(eng1, greedy_idx)
+        verify_compiles = eng1.verify_compile_count() - compiles0
+        eng2 = mk_engine(True)                     # 3: mixed traffic
+        mixed = serve(eng2, list(range(n_req)))
+    finally:
+        if prev is None:
+            del os.environ["REPRO_FUSED_PREFILL"]
+        else:
+            os.environ["REPRO_FUSED_PREFILL"] = prev
+
+    greedy_bitexact = spec == base
+    mixed_greedy_bitexact = mixed[:SD_GREEDY] == base
+    if not greedy_bitexact:
+        raise AssertionError(
+            f"speculative greedy streams diverged:\n  base: {base}\n"
+            f"  spec: {spec}")
+
+    m0, m1 = eng0.metrics, eng1.metrics
+    tpj0 = m0["tokens_out"] / max(m0["energy_joules"], 1e-12)
+    tpj1 = m1["tokens_out"] / max(m1["energy_joules"], 1e-12)
+
+    result = {
+        "requests_greedy": SD_GREEDY,
+        "requests_sampled": SD_SAMPLED,
+        "prompt_len": SD_PATTERN_LEN * SD_PATTERN_REPS,
+        "max_new_tokens": SD_MAX_NEW,
+        "spec_tokens": SD_SPEC_TOKENS,
+        "proposer": "ngram",
+        "fused_mode": fused_mode,
+        "greedy_bitexact": bool(greedy_bitexact),
+        "mixed_greedy_bitexact": bool(mixed_greedy_bitexact),
+        "draft_tokens": m1["draft_tokens"],
+        "accepted_tokens": m1["accepted_tokens"],
+        "accept_ratio": m1["accept_ratio"],
+        "steps_per_token": m1["steps_per_token"],
+        "steps_per_token_nonspec": m0["steps_per_token"],
+        "verify_steps": m1["verify_steps"],
+        "spec_rollbacks": m1["spec_rollbacks"],
+        "verify_compiles": verify_compiles,
+        "compile_bound": SD_COMPILE_BOUND,
+        "energy_joules": m1["energy_joules"],
+        "energy_joules_nonspec": m0["energy_joules"],
+        "tokens_per_joule": float(tpj1),
+        "tokens_per_joule_nonspec": float(tpj0),
+        "mixed_accept_ratio": eng2.metrics["accept_ratio"],
+        "mixed_steps_per_token": eng2.metrics["steps_per_token"],
+    }
+    if not quiet:
+        print(f"enginebench/spec_steps_per_token,"
+              f"{result['steps_per_token']:.3f},steps/token"
+              f" (non-spec 1.000; accept ratio"
+              f" {result['accept_ratio']:.2f} ="
+              f" {result['accepted_tokens']}/{result['draft_tokens']}"
+              f" drafts, {result['spec_rollbacks']} rollbacks)")
+        print(f"enginebench/spec_tokens_per_joule,{tpj1:.0f},tok/J"
+              f" (non-spec {tpj0:.0f}, roofline model)")
+        print(f"enginebench/spec_bitexact,"
+              f"{int(greedy_bitexact and mixed_greedy_bitexact)},bool"
+              f" (solo {greedy_bitexact}, mixed {mixed_greedy_bitexact};"
+              f" verify compiles {verify_compiles})")
+    return result
+
+
 def run_fault_tolerance(model, params, quiet: bool = False) -> dict:
     """Serve FT_PROMPT_LENS (6 singletons + one n_samples=2 group) three
     times and report the fault layer's acceptance bars:
@@ -616,6 +747,9 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         "prefill_chunks": eng.metrics["prefill_chunks"],
         "chunk_batch_calls": eng.metrics["chunk_batch_calls"],
         "preemptions": eng.metrics["preemptions"],
+        "energy_joules": eng.metrics["energy_joules"],
+        "tokens_per_joule": eng.metrics["tokens_out"]
+                            / max(eng.metrics["energy_joules"], 1e-12),
     }
     result["shared_prefix"] = run_shared_prefix(model, params, quiet=quiet)
     result["parallel_sampling"] = run_parallel_sampling(model, params,
@@ -624,12 +758,17 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     result["long_context"] = run_long_context(model, params, quiet=quiet)
     result["fault_tolerance"] = run_fault_tolerance(model, params,
                                                     quiet=quiet)
+    result["spec_decode"] = run_spec_decode(model, params, quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:
         print(f"enginebench/ttft_ms_p50,{result['ttft_ms_p50']:.1f},ms")
         print(f"enginebench/ttft_ms_p99,{result['ttft_ms_p99']:.1f},ms")
         print(f"enginebench/decode_tok_s,{result['decode_tok_s']:.1f},tok/s")
+        print(f"enginebench/tokens_per_joule,"
+              f"{result['tokens_per_joule']:.0f},tok/J"
+              f" ({result['energy_joules']:.2e} J roofline,"
+              f" mixed workload)")
         print(f"enginebench/preemptions,{result['preemptions']},count"
               f" (pool {n_pages}/{full_reservation} blocks,"
               f" {result['prefill_chunks']} chunks in"

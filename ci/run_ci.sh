@@ -149,4 +149,37 @@ if not ft["faultfree_bitexact"]:
 if not ft["survivors_bitexact"]:
     sys.exit("FAIL: surviving requests of the faulted run diverged from "
              "the fault-free streams — fault isolation is not bit-exact")
+sd = bench["spec_decode"]
+print(f"  spec decode: accept_ratio={sd['accept_ratio']:.2f} "
+      f"({sd['accepted_tokens']}/{sd['draft_tokens']} drafts, "
+      f"{sd['spec_rollbacks']} rollbacks) "
+      f"steps_per_token={sd['steps_per_token']:.3f} "
+      f"compiles={sd['verify_compiles']} (bound {sd['compile_bound']}) "
+      f"bitexact={sd['greedy_bitexact'] and sd['mixed_greedy_bitexact']} "
+      f"tok/J={sd['tokens_per_joule']:.0f} "
+      f"(non-spec {sd['tokens_per_joule_nonspec']:.0f})")
+# Speculative-decoding tripwires: (a) the greedy repetitive-suffix
+# workload is the n-gram proposer's sweet spot — zero acceptance means
+# drafting or the acceptance walk silently broke; (b) speculation must
+# actually reduce per-sequence device steps below one-per-token, or the
+# whole mechanism is overhead; (c) greedy speculative streams must stay
+# bit-identical to non-speculative serving, solo AND mixed with sampled
+# traffic (drafts may only decide how many tokens land, never which);
+# (d) the verify chunk must hold the one-executable-per-pool-key bound.
+if sd["draft_tokens"] <= 0 or sd["accept_ratio"] <= 0:
+    sys.exit("FAIL: spec-decode workload accepted zero draft tokens on "
+             "the repetitive-suffix greedy workload — drafting or the "
+             "acceptance walk is broken")
+if sd["steps_per_token"] >= 1.0:
+    sys.exit(f"FAIL: speculative serving took "
+             f"{sd['steps_per_token']:.3f} device steps per emitted "
+             f"token (>= 1.0) — speculation is pure overhead on its "
+             f"own sweet-spot workload")
+if not sd["greedy_bitexact"] or not sd["mixed_greedy_bitexact"]:
+    sys.exit(f"FAIL: greedy speculative streams diverged from "
+             f"non-speculative serving (solo {sd['greedy_bitexact']}, "
+             f"mixed {sd['mixed_greedy_bitexact']})")
+if sd["verify_compiles"] > sd["compile_bound"]:
+    sys.exit(f"FAIL: verify chunk compiled {sd['verify_compiles']}x "
+             f"(documented bound: {sd['compile_bound']} per pool key)")
 EOF

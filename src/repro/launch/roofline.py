@@ -40,6 +40,22 @@ PEAK_FLOPS_BF16 = 197e12          # per chip
 PEAK_FLOPS_INT8 = 394e12
 HBM_BW = 819e9                    # B/s per chip
 ICI_BW = 50e9                     # B/s per link
+V5E_POWER_W = 170.0               # per-chip board power under load
+
+
+def step_joules(bytes_moved: float, flops: float,
+                power_w: float = V5E_POWER_W,
+                hbm_bw: float = HBM_BW,
+                peak_flops: float = PEAK_FLOPS_BF16) -> float:
+    """Roofline energy for one device call: the call takes
+    max(memory time, compute time) and the chip burns ``power_w`` for
+    that long.  This is the serving-stack energy model — the engine
+    feeds it per-step bytes (weights + live KV tiles + activations) and
+    FLOPs, and the benchmark divides tokens by the accumulated joules
+    (the paper's tokens/J metric, here from the analytic roofline
+    rather than a power meter)."""
+    t = max(bytes_moved / hbm_bw, flops / peak_flops)
+    return t * power_w
 
 
 def tree_bytes(tree) -> int:

@@ -23,7 +23,8 @@ from repro.serving.engine import Engine
 def run(arch: str = "llama2-110m", use_reduced: bool = True,
         requests: int = 16, bits: int = 8, kv_int8: bool = False,
         max_seq: int = 512, max_new: int = 48, slots: int = 4,
-        ckpt_dir: str = "", seed: int = 0, no_quant: bool = False):
+        ckpt_dir: str = "", seed: int = 0, no_quant: bool = False,
+        spec_tokens: int = 0, draft: str = "ngram"):
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
@@ -44,7 +45,8 @@ def run(arch: str = "llama2-110m", use_reduced: bool = True,
         print(f"[serve] Q{bits}_0 post-training quantization "
               f"in {time.perf_counter()-t0:.2f}s")
 
-    eng = Engine(model, params, max_slots=slots, max_seq=max_seq, seed=seed)
+    eng = Engine(model, params, max_slots=slots, max_seq=max_seq, seed=seed,
+                 spec_tokens=spec_tokens, draft_proposer=draft)
     rng = np.random.default_rng(seed)
     for _ in range(requests):
         plen = int(rng.integers(4, 32))
@@ -62,6 +64,17 @@ def run(arch: str = "llama2-110m", use_reduced: bool = True,
     if lat:
         print(f"[serve] TTFT p50 {np.median(lat)*1e3:.0f}ms  "
               f"p95 {np.percentile(lat, 95)*1e3:.0f}ms")
+    joules = eng.metrics["energy_joules"]
+    if joules > 0:
+        print(f"[serve] roofline energy {joules:.3g} J -> "
+              f"{toks/joules:,.0f} tok/J (model, not measured)")
+    if spec_tokens > 0:
+        print(f"[serve] speculation ({draft}, k={spec_tokens}): "
+              f"accept_ratio {eng.metrics['accept_ratio']:.2f} "
+              f"({eng.metrics['accepted_tokens']}"
+              f"/{eng.metrics['draft_tokens']} drafts), "
+              f"steps/token {eng.metrics['steps_per_token']:.3f}, "
+              f"{eng.metrics['spec_rollbacks']} rollbacks")
     return eng, done
 
 
@@ -78,11 +91,16 @@ def main():
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="draft-then-verify speculation depth (0 = off)")
+    ap.add_argument("--draft", default="ngram",
+                    help="draft proposer kind (see serving/spec_decode.py)")
     ap.set_defaults(reduced=True)
     args = ap.parse_args()
     run(args.arch, args.reduced, args.requests, args.bits, args.kv_int8,
         args.max_seq, args.max_new, args.slots, args.ckpt_dir,
-        no_quant=args.no_quant)
+        no_quant=args.no_quant, spec_tokens=args.spec_tokens,
+        draft=args.draft)
 
 
 if __name__ == "__main__":

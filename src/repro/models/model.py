@@ -44,6 +44,12 @@ class Model:
     # shape-stability probe: distinct XLA compiles of the chunk step so
     # far (transformer.prefill_chunk_compiles); None when unpaged.
     prefill_compile_count: Optional[Callable[[], int]] = None
+    # speculative verify: the all-positions-logits twin of
+    # prefill_chunk_batch — verify_chunk_batch(params, tokens (B, c),
+    # cache, slots, pos_offsets, chunk_lens=...) -> ((B, c, V) logits,
+    # cache) — with its own compile probe; None when unpaged.
+    verify_chunk_batch: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
+    verify_compile_count: Optional[Callable[[], int]] = None
 
     def quantize(self, params, policy: Optional[QuantPolicy] = None,
                  fuse_decode: bool = True):
@@ -70,6 +76,7 @@ def build_model(cfg: ModelConfig) -> Model:
             init_cache=lambda bsz, seq: encdec.init_cache(cfg, bsz, seq),
         )
     paged = chunk = chunk_batch = compiles = None
+    verify_batch = verify_compiles = None
     if transformer.supports_paged_cache(cfg):
         paged = lambda bsz, **kw: transformer.init_paged_cache(cfg, bsz, **kw)
         chunk = lambda p, t, c, slot, off: transformer.prefill_chunk(
@@ -79,6 +86,11 @@ def build_model(cfg: ModelConfig) -> Model:
                 p, cfg, t, c, slots, offs, page_table=page_table,
                 chunk_lens=chunk_lens)
         compiles = lambda: transformer.prefill_chunk_compiles(cfg)
+        verify_batch = lambda p, t, c, slots, offs, page_table=None, \
+            chunk_lens=None: transformer.verify_chunk_batch(
+                p, cfg, t, c, slots, offs, page_table=page_table,
+                chunk_lens=chunk_lens)
+        verify_compiles = lambda: transformer.verify_chunk_compiles(cfg)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),
@@ -91,6 +103,8 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_chunk=chunk,
         prefill_chunk_batch=chunk_batch,
         prefill_compile_count=compiles,
+        verify_chunk_batch=verify_batch,
+        verify_compile_count=verify_compiles,
     )
 
 

@@ -932,6 +932,48 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
     engine publishes both from the same allocator state) to spare a
     device readback per call.
     """
+    args = _chunk_call_args(tokens_chunks, cache, slots, pos_offsets,
+                            page_table, chunk_lens)
+    return _prefill_chunk_fn(cfg, prefill_fused_mode())(
+        params, cache, *args)
+
+
+def verify_chunk_batch(params: Params, cfg: ModelConfig,
+                       tokens_chunks: jax.Array, cache: Cache,
+                       slots, pos_offsets,
+                       page_table=None,
+                       chunk_lens=None) -> Tuple[jax.Array, Cache]:
+    """Multi-token speculative *verify* step: exactly
+    :func:`prefill_chunk_batch` — same traced addressing, same fused /
+    oracle prefix read, same KV scatter — but returning logits for **all**
+    ``c`` chunk positions, ``(B, c, V)``, instead of only each row's last.
+
+    The draft tokens of each row are fed as a k-token "chunk" at
+    ``pos_offset = kv_len``; position ``j``'s logits row conditions on
+    the prefix plus draft tokens ``< j``, which is what the acceptance
+    rule samples from.  Rows past ``chunk_lens`` are masked as in
+    prefill; their logits are garbage and must not be read.
+
+    Kept as a *separate* jit entry (see :func:`_prefill_chunk_fn`'s
+    ``all_logits`` flag) so the wide prefill extent never materializes a
+    ``(B, prefill_chunk_tokens, V)`` logits tensor: the engine pads
+    verify calls to the narrow ``(max_slots, spec_tokens + 1)`` extent
+    and this entry holds its own one-executable-per-pool-key bound,
+    probed by :func:`verify_chunk_compiles`.
+    """
+    args = _chunk_call_args(tokens_chunks, cache, slots, pos_offsets,
+                            page_table, chunk_lens)
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True)(
+        params, cache, *args)
+
+
+def _chunk_call_args(tokens_chunks, cache: Cache, slots, pos_offsets,
+                     page_table, chunk_lens):
+    """Host-side (concrete) addressing shared by the prefill and verify
+    chunk entries: each row's chunk lives at fixed (block, offset)
+    coordinates in its own leased blocks; positions past the row's valid
+    length scatter out of bounds (dropped), so padding can never write
+    into a block another sequence leases."""
     if "page_table" not in cache:
         raise ValueError("prefill_chunk requires a paged cache "
                          "(init_paged_cache)")
@@ -948,10 +990,6 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
     nb, bs = cache["attn"]["k"].shape[1], cache["attn"]["k"].shape[2]
     max_slots = cache["lens"].shape[0]
 
-    # Host-side (concrete) addressing: each row's chunk lives at fixed
-    # (block, offset) coordinates in its own leased blocks; positions
-    # past the row's valid length scatter out of bounds (dropped), so
-    # padding can never write into a block another sequence leases.
     pt = np.asarray(cache["page_table"] if page_table is None
                     else page_table)
     mb = pt.shape[1]
@@ -976,14 +1014,13 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
                        np.maximum(rows, 0), 0).astype(np.int32)
     safe_slots = np.where(valid, slots, max_slots)     # OOB -> lens drop
 
-    return _prefill_chunk_fn(cfg, prefill_fused_mode())(
-        params, cache, toks,
-        jnp.asarray(chunk_blk),
-        jnp.asarray(chunk_off),
-        jnp.asarray(pt_rows),
-        jnp.asarray(safe_slots),
-        jnp.asarray(offs),
-        jnp.asarray(np.where(valid, lens, 0)))
+    return (toks,
+            jnp.asarray(chunk_blk),
+            jnp.asarray(chunk_off),
+            jnp.asarray(pt_rows),
+            jnp.asarray(safe_slots),
+            jnp.asarray(offs),
+            jnp.asarray(np.where(valid, lens, 0)))
 
 
 def prefill_fused_mode() -> str:
@@ -1024,8 +1061,17 @@ def prefill_chunk_compiles(cfg: ModelConfig) -> int:
     return _prefill_chunk_fn(cfg, prefill_fused_mode())._cache_size()
 
 
+def verify_chunk_compiles(cfg: ModelConfig) -> int:
+    """Same probe as :func:`prefill_chunk_compiles` for the verify entry
+    (the ``all_logits=True`` twin of the chunk step).  The engine pads
+    every verify call to one fixed ``(max_slots, spec_tokens + 1)``
+    extent, so this too must stay at one executable per pool key."""
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True)._cache_size()
+
+
 @functools.lru_cache(maxsize=None)
-def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle"):
+def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
+                      all_logits: bool = False):
     """Build (once per config + prefix-path mode) the jitted,
     cache-donating chunk step.
 
@@ -1038,7 +1084,13 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle"):
     dereferences the page table under scalar prefetch and skips dead
     tiles (mode "kernel"/"interpret") — see :func:`prefill_fused_mode`.
     Either way the per-row offsets/lengths stay traced, so the
-    one-compile-per-pool-key bound holds for both paths."""
+    one-compile-per-pool-key bound holds for both paths.
+
+    ``all_logits=True`` builds the speculative-verify twin: identical
+    body, but the head projects every chunk position — ``(B, c, V)`` —
+    instead of gathering each row's last valid position first.  It lives
+    under its own lru/jit entry so verify's narrow padded extent never
+    shares (or churns) the prefill executable."""
     hd = cfg.hd()
     kvh = cfg.n_kv_heads
     int8 = _kv_int8(cfg)
@@ -1134,9 +1186,12 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle"):
 
         x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
         x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
-        last = jnp.clip(lens - 1, 0, c - 1)
-        logits = L.lm_head(_head_weight(params, cfg),
-                           x[jnp.arange(b), last])
+        if all_logits:
+            logits = L.lm_head(_head_weight(params, cfg), x)   # (b, c, V)
+        else:
+            last = jnp.clip(lens - 1, 0, c - 1)
+            logits = L.lm_head(_head_weight(params, cfg),
+                               x[jnp.arange(b), last])
         new_cache = dict(cache)
         new_cache["attn"] = new_attn
         new_cache["lens"] = cache["lens"].at[slots].set(offs + lens,

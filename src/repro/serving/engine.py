@@ -78,9 +78,35 @@ logical best-of-n across engines.  Per-sibling ``stop_tokens`` (on top
 of the global ``eos_id``) let siblings in one group retire on different
 ids.
 
+**Speculative decoding (``spec_tokens > 0``).**  Draft-then-verify on
+the paged pool: a host-side proposer (serving/spec_decode.py — n-gram
+prompt-lookup by default, a small draft model behind the same
+``propose()`` interface) guesses up to ``spec_tokens`` next tokens per
+running sequence, and the scheduler plans a :class:`SpecVerify` instead
+of that slot's decode.  The engine verifies ALL drafts in one device
+call by treating them as a k+1-token *chunk* — ``verify_chunk_batch``
+is the all-positions-logits twin of ``prefill_chunk_batch``, padded to
+a fixed ``(max_slots, spec_tokens + 1)`` extent, so it reuses the fused
+paged chunk-attention kernel and holds its own one-executable-per-pool-
+key bound (``metrics["verify_compiles"]``).  Acceptance re-samples
+every position from the *verified* logits with the exact per-position
+key non-speculative decode would have used (``fold_in(stream_key, t)``
+for output position ``t``), so greedy speculative streams are
+bit-identical to non-speculative streams and sampled streams stay
+composition-independent however many drafts land; drafts only decide
+how many tokens commit per step, never which.  Rejection rollback is
+**block-pool truncation**: ``BlockAllocator.truncate`` shrinks the
+slot's lease to the accepted length through the normal release path,
+and since the engine registers prefix-index blocks only *after*
+acceptance, speculative KV is never reachable from the prefix index.
+``metrics`` reports ``draft_tokens`` / ``accepted_tokens`` /
+``accept_ratio`` / ``steps_per_token`` (per-sequence device steps per
+emitted token: 1.0 = plain decode, < 1.0 = speculation paying off).
+
 Knobs: ``prefill_chunk_tokens`` bounds prompt work per step (the
 prefill/decode interleaving grain); ``page_size``/``n_pages`` size the
 pool; ``prefix_caching`` toggles the block index (on by default);
+``spec_tokens``/``draft_proposer`` turn on speculative decoding;
 ``preempt_limit`` is the scheduler's starvation bound.  ``Engine.plan_log``
 keeps the executed step plans (uids, chunk ranges, preemptions, COW
 pairs, cached-prefix admissions, fanouts) for inspection — tests assert
@@ -100,7 +126,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Model
+from repro.launch.roofline import step_joules, tree_bytes
+from repro.models.model import Model, count_params
 from repro.runtime.health import StragglerDetector
 from repro.serving.faults import (ERR_AUDIT, ERR_DEADLINE, ERR_FAULT,
                                   ERR_NAN, ERR_SHED, SITE_DECODE,
@@ -108,8 +135,9 @@ from repro.serving.faults import (ERR_AUDIT, ERR_DEADLINE, ERR_FAULT,
                                   InjectedFault, SchedulerStall)
 from repro.serving.paged_cache import (BlockAllocator, PagedConfig,
                                        chain_hash)
-from repro.serving.scheduler import (PrefillChunk, Scheduler, StepPlan,
-                                     validate_request)
+from repro.serving.scheduler import (PrefillChunk, Scheduler, SpecVerify,
+                                     StepPlan, validate_request)
+from repro.serving.spec_decode import build_proposer
 
 
 @dataclasses.dataclass
@@ -238,13 +266,22 @@ class Engine:
                  nan_guard: bool = True, retry_limit: int = 2,
                  audit_interval: int = 0,
                  shed_after_preempts: Optional[int] = None,
-                 stall_shed_limit: int = 3):
+                 stall_shed_limit: int = 3,
+                 spec_tokens: int = 0, draft_proposer: Any = None):
         self.model = model
         self.params = params
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.prefill_chunk_tokens = prefill_chunk_tokens
+        # -- speculative decoding (module docstring) ----------------------
+        # draft_proposer: None/str -> built by name ("ngram" default);
+        # anything with .propose(prompt, output, k) is used as-is
+        self.spec_tokens = spec_tokens
+        if spec_tokens > 0 and (draft_proposer is None
+                                or isinstance(draft_proposer, str)):
+            draft_proposer = build_proposer(draft_proposer or "ngram")
+        self.draft_proposer = draft_proposer
         # -- fault domain (serving/faults.py) ----------------------------
         # clock: None = wall time; else a callable or .now() object (a
         # SimClock makes deadlines and latency faults deterministic)
@@ -291,7 +328,22 @@ class Engine:
         self.scheduler = Scheduler(
             max_slots=max_slots, max_seq=max_seq, pager=self.pager,
             prefill_chunk_tokens=prefill_chunk_tokens,
-            preempt_limit=preempt_limit)
+            preempt_limit=preempt_limit, spec_tokens=spec_tokens,
+            draft_proposer=self.draft_proposer)
+        # -- roofline energy model (launch/roofline.step_joules) ----------
+        # every device call streams the weights once plus the KV rows it
+        # touches; KV traffic is modeled for the paged pool only (dense
+        # families fall back to weight streaming, which dominates anyway)
+        self._param_bytes = float(tree_bytes(params))
+        self._n_params = float(count_params(params))
+        if self.paged:
+            per_pos = (2 * model.cfg.n_kv_heads * model.cfg.hd()
+                       * self.cache["attn"]["k"].dtype.itemsize)
+            if "ks" in self.cache["attn"]:
+                per_pos += 2 * model.cfg.n_kv_heads * 4   # dequant scales
+            self._kv_row_bytes = per_pos * model.cfg.n_layers
+        else:
+            self._kv_row_bytes = 0
         self.plan_log: List[Dict[str, Any]] = []
         self.metrics = {"tokens_out": 0, "requests_done": 0,
                         "decode_steps": 0, "t_decode": 0.0,
@@ -307,6 +359,22 @@ class Engine:
                         # the page table vs the legacy full-extent gather
                         "prefix_attn_bytes": 0,
                         "prefix_attn_bytes_gather": 0,
+                        # speculative decoding: drafts proposed/accepted,
+                        # verify device calls + their compile bound, and
+                        # rejection rollbacks (block-pool truncations).
+                        # seq_steps counts per-SEQUENCE device steps, so
+                        # steps_per_token = seq_steps / tokens_out is
+                        # exactly 1.0 for plain decode and dips below it
+                        # only when verification lands >1 token per step
+                        "draft_tokens": 0, "accepted_tokens": 0,
+                        "verify_steps": 0, "spec_rollbacks": 0,
+                        "verify_compiles": 0, "seq_steps": 0,
+                        "accept_ratio": 0.0, "steps_per_token": 0.0,
+                        # modeled energy (roofline.step_joules) + per-
+                        # request prefix-cache attribution
+                        # (uid -> {cached_tokens, cache_hit})
+                        "energy_joules": 0.0,
+                        "requests": {},
                         # fault-domain counters
                         "step_retries": 0, "requests_failed": 0,
                         "requests_rejected": 0, "nan_rows": 0,
@@ -410,6 +478,12 @@ class Engine:
             elif not plan.preempted:
                 self._preempt_streak = 0
             self.plan_log.append(plan.summary())
+            for uid, cached in plan.admitted:
+                # first admission wins: a preempt-resume re-admission must
+                # not overwrite the request's original cache attribution
+                self.metrics["requests"].setdefault(
+                    uid, {"cached_tokens": int(cached),
+                          "cache_hit": cached > 0})
             self.metrics["preemptions"] = self.scheduler.n_preempted
             self.metrics["prefix_hits"] = \
                 self.scheduler.prefix_stats["hits"]
@@ -453,6 +527,22 @@ class Engine:
                 self._done_at_prefill = []
             if plan.decodes:
                 done.extend(self._decode_once(plan.decodes))
+            if plan.verifies:
+                # AFTER decodes: a verify's truncation frees blocks that
+                # only re-enter circulation at the next schedule(), so
+                # nothing executed this step can observe the rollback
+                done.extend(self._run_verifies(plan.verifies))
+                self.metrics["verify_compiles"] = \
+                    self.verify_compile_count()
+                self.plan_log[-1]["verify_compiles"] = \
+                    self.metrics["verify_compiles"]
+            drafted = self.metrics["draft_tokens"]
+            self.metrics["accept_ratio"] = (
+                self.metrics["accepted_tokens"] / drafted if drafted
+                else 0.0)
+            self.metrics["steps_per_token"] = (
+                self.metrics["seq_steps"]
+                / max(1, self.metrics["tokens_out"]))
             if plan.has_work() and self.straggler.record_slow(
                     0, self._now() - t_step):
                 self.metrics["slow_steps"] += 1
@@ -487,6 +577,15 @@ class Engine:
         if self.model.prefill_compile_count is None:
             return 0
         return self.model.prefill_compile_count()
+
+    def verify_compile_count(self) -> int:
+        """Distinct XLA compiles of the speculative verify step (the
+        all-positions-logits chunk entry) — same one-per-pool-key bar
+        as the prefill chunk, probed separately because the two entries
+        are distinct executables."""
+        if self.model.verify_compile_count is None:
+            return 0
+        return self.model.verify_compile_count()
 
     # -- fault domain ---------------------------------------------------
     def _fail_request(self, req: Request, msg: str, kind: str,
@@ -651,6 +750,25 @@ class Engine:
                 for req in victims.values()]
 
     # -- internals ------------------------------------------------------
+    def _account_energy(self, n_tokens: float, attn_pairs: float,
+                        kv_rows_read: float) -> None:
+        """Accumulate modeled energy for ONE device call
+        (``metrics["energy_joules"]``, roofline.step_joules): the call
+        streams the weights once plus the touched KV rows
+        (``kv_rows_read`` reads + one write per token), and runs
+        ``2·P`` FLOPs per token plus ``4·H·hd`` per (query, key)
+        attention pair per layer.  benchmarks/engine_bench.py divides
+        tokens by the total for the paper's tokens/J metric."""
+        if n_tokens <= 0:
+            return
+        cfg = self.model.cfg
+        bytes_moved = (self._param_bytes
+                       + (kv_rows_read + n_tokens) * self._kv_row_bytes)
+        flops = (2.0 * self._n_params * n_tokens
+                 + 4.0 * cfg.n_heads * cfg.hd() * cfg.n_layers
+                 * attn_pairs)
+        self.metrics["energy_joules"] += step_joules(bytes_moved, flops)
+
     def _account_prefix_bytes(self, offs: np.ndarray,
                               lens: np.ndarray) -> None:
         """Roofline estimate of the prefix K/V traffic one chunk step
@@ -672,6 +790,13 @@ class Engine:
             live_tiles * bs * per_pos * n_layers)
         self.metrics["prefix_attn_bytes_gather"] += (
             int(live.sum()) * mb * bs * per_pos * n_layers)
+        # same per-call numbers feed the energy model: prefix tiles are
+        # the KV reads, and each row self-attends causally within its
+        # own chunk (len·off cross pairs + len(len+1)/2 within-chunk)
+        ln = lens.astype(np.int64)
+        pairs = float((ln * offs + ln * (ln + 1) // 2).sum())
+        self._account_energy(float(ln.sum()), pairs,
+                             float(live_tiles * bs))
 
     def _run_chunks(self, chunks: List[PrefillChunk]) -> List[Request]:
         """Execute ALL of this step's planned chunks — paged: one
@@ -926,7 +1051,12 @@ class Engine:
         nxt = np.asarray(sample_logits_per_row(
             keys, logits, jnp.asarray(temps), jnp.asarray(top_ps)))
         self.metrics["decode_steps"] += 1
+        self.metrics["seq_steps"] += len(slots)
         self.metrics["t_decode"] += self._now() - t0
+        kv_now = sum(self.scheduler.running[i].kv_len for i in slots
+                     if i in self.scheduler.running)
+        self._account_energy(float(len(slots)), float(kv_now),
+                             float(kv_now))
 
         finished: List[Request] = []
         for i in slots:
@@ -962,6 +1092,134 @@ class Engine:
         # mid-prefill row whose position the batched step bumped gets its
         # prefill progress back (its garbage KV row is overwritten by the
         # next chunk, or dropped when the block isn't allocated yet).
+        self.cache["lens"] = jnp.asarray(self.scheduler.device_lens(),
+                                         jnp.int32)
+        return finished
+
+    def _run_verifies(self, verifies: List[SpecVerify]) -> List[Request]:
+        """Execute this step's speculative verify calls — ONE batched
+        ``verify_chunk_batch`` padded to the fixed
+        ``(max_slots, spec_tokens + 1)`` extent (padding rows carry slot
+        -1 and write nothing, same contract as the prefill chunk).
+
+        Each row feeds ``[output[-1], drafts...]`` at positions
+        ``start..start+k`` and gets logits for all k+1 positions; every
+        position ``j`` is then sampled with the exact key non-speculative
+        decode would have used for output position ``m + j`` (``m`` =
+        tokens emitted so far), so the emitted stream is independent of
+        the drafts — they only decide how many positions commit.  The
+        acceptance walk appends emitted tokens while they agree with the
+        drafts (the position-``j`` logits conditioned on drafts ``< j``,
+        so agreement up to ``j-1`` makes row ``j`` trustworthy), always
+        commits the first token (a verify step never emits fewer tokens
+        than the plain decode it replaced), and on disagreement or stop
+        rolls the slot's lease back to the accepted length via
+        ``BlockAllocator.truncate`` — BEFORE ``_register_blocks``, so the
+        prefix index can never serve speculative KV."""
+        failed: List[Request] = []
+        if self.faults is not None:
+            verifies, failed = self._survive_faults(
+                SITE_DECODE, list(verifies),
+                uid_of=lambda v: v.seq.req.uid,
+                alive=lambda v:
+                    self.scheduler.running.get(v.seq.slot) is v.seq)
+            if not verifies:
+                self.cache["lens"] = jnp.asarray(
+                    self.scheduler.device_lens(), jnp.int32)
+                return failed
+        nrows, width = self.max_slots, self.spec_tokens + 1
+        toks = np.zeros((nrows, width), np.int32)
+        lens = np.zeros((nrows,), np.int32)
+        offs = np.zeros((nrows,), np.int32)
+        slots = np.full((nrows,), -1, np.int32)
+        temps = np.ones((nrows,), np.float32)
+        top_ps = np.ones((nrows,), np.float32)
+        zero = jax.random.PRNGKey(0)
+        key_flat: List[Any] = [zero] * (nrows * width)
+        row_uids: List[Optional[int]] = [None] * nrows
+        for i, v in enumerate(verifies):
+            seq = v.seq
+            k = len(v.drafts)
+            lens[i] = k + 1
+            toks[i, 0] = seq.output[-1]
+            toks[i, 1:k + 1] = v.drafts
+            offs[i] = v.start
+            slots[i] = seq.slot
+            temps[i] = seq.req.temperature
+            top_ps[i] = seq.req.top_p
+            row_uids[i] = seq.req.uid
+            m = len(seq.output)
+            for j in range(k + 1):
+                key_flat[i * width + j] = jax.random.fold_in(
+                    self._seq_key(seq), m + j)
+        keys = jnp.stack(key_flat)
+
+        t0 = self._now()
+        if self.faults is not None:
+            self.faults.latency(self._step)
+        logits, self.cache = self.model.verify_chunk_batch(
+            self.params, toks, self.cache, slots, offs,
+            page_table=self._host_pt, chunk_lens=lens)
+        if self.faults is not None:
+            logits = self.faults.corrupt_logits(
+                SITE_DECODE, self._step, logits, row_uids)
+        finite = (np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+                  if self.nan_guard else None)        # (nrows, width)
+        emitted = np.asarray(sample_logits_per_row(
+            keys, logits.reshape(nrows * width, logits.shape[-1]),
+            jnp.asarray(np.repeat(temps, width)),
+            jnp.asarray(np.repeat(top_ps, width)))).reshape(nrows, width)
+        self.metrics["verify_steps"] += 1
+        self.metrics["seq_steps"] += len(verifies)
+        self.metrics["t_decode"] += self._now() - t0
+        # the verify reads the prefix through the same paged path as a
+        # prefill chunk — account its tile traffic (and energy) the same
+        self._account_prefix_bytes(offs, lens)
+
+        finished: List[Request] = []
+        for i, v in enumerate(verifies):
+            seq = v.seq
+            if self.scheduler.running.get(seq.slot) is not seq \
+                    or seq.req.error is not None:
+                continue         # torn down by an earlier row this step
+            k = len(v.drafts)
+            if finite is not None and not bool(finite[i, :k + 1].all()):
+                # any poisoned position taints the whole row: its KV
+                # writes are suspect — quarantine + fail, same rule as
+                # the decode path (survivors' draws are independent)
+                self.metrics["nan_rows"] += 1
+                self.fault_log.append(
+                    {"step": self._step, "kind": "nan",
+                     "site": SITE_DECODE, "uid": seq.req.uid})
+                failed.append(self._fail_request(
+                    seq.req, "non-finite logits during verify", ERR_NAN,
+                    quarantine=True))
+                continue
+            appended = 0
+            stop = False
+            for j in range(k + 1):
+                tok = int(emitted[i, j])
+                seq.output.append(tok)
+                appended += 1
+                self.metrics["tokens_out"] += 1
+                seq.kv_len = v.start + appended
+                stop = self._stop_hit(seq, tok)
+                if stop or j >= k or v.drafts[j] != tok:
+                    break
+            self.metrics["draft_tokens"] += k
+            self.metrics["accepted_tokens"] += appended - 1
+            if appended <= k:
+                self.metrics["spec_rollbacks"] += 1
+            # rollback-as-truncation: shrink the lease to the accepted
+            # length first, then register — rejected rows can neither
+            # stay leased nor reach the prefix index
+            self.pager.truncate(seq.slot, seq.kv_len)
+            self._register_blocks(seq)
+            if stop:
+                done_req = self._finish_seq(seq)
+                if done_req is not None:
+                    finished.append(done_req)
+        finished.extend(failed)
         self.cache["lens"] = jnp.asarray(self.scheduler.device_lens(),
                                          jnp.int32)
         return finished

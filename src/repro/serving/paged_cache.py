@@ -222,6 +222,30 @@ class BlockAllocator:
         for bid in reversed(blocks):
             self._deref(bid)
 
+    def truncate(self, slot: int, length: int) -> int:
+        """Shrink ``slot``'s lease list to cover exactly ``length`` tokens
+        — speculative-decode rollback as *truncation*: rejected tail
+        tokens are un-appended and their blocks flow back through the
+        ordinary release paths (no new reclaim machinery).
+
+        A dropped block that this slot holds exclusively is
+        **unregistered** before deref — if the engine registered it while
+        its content was still speculative, parking it on the LRU would
+        let the prefix index serve rejected KV.  A dropped block with
+        other leaseholders is merely deref'd: shared content predates the
+        speculation (fork/prefix sharing) and stays valid for its other
+        holders.  Returns the number of blocks dropped."""
+        keep = self.blocks_needed(length)
+        cur = self.owned[slot]
+        dropped = 0
+        while len(cur) > keep:
+            bid = cur.pop()
+            if self.refcount[bid] == 1:
+                self._unregister(bid)
+            self._deref(bid)
+            dropped += 1
+        return dropped
+
     # -- prefix cache -----------------------------------------------------
     def prefix_hashes(self, tokens) -> List[int]:
         """Chain hashes of ``tokens``' full blocks, counted as ONE lookup.
@@ -355,11 +379,14 @@ class BlockAllocator:
             return 0
         return n if length % self.cfg.block_size == 0 else n - 1
 
-    def append_cost(self, slot: int, pos: int) -> int:
-        """New blocks a one-row append at ``pos`` would take: the grown
-        block (if ``pos`` opens one) plus a COW copy (if ``pos`` lands in
-        a block this slot cannot write — shared or registered)."""
-        need = max(0, self.blocks_needed(pos + 1) - len(self.owned[slot]))
+    def append_cost(self, slot: int, pos: int, n: int = 1) -> int:
+        """New blocks an ``n``-row append at ``pos..pos+n-1`` would take:
+        the grown blocks (any the extension opens) plus a COW copy (if
+        ``pos`` lands in a block this slot cannot write — shared or
+        registered; only the *first* position can, every later one lands
+        in a freshly grown exclusive block).  ``n > 1`` prices a
+        speculative verify step's k+1 rows."""
+        need = max(0, self.blocks_needed(pos + n) - len(self.owned[slot]))
         bi = pos // self.cfg.block_size
         if pos % self.cfg.block_size and bi < len(self.owned[slot]):
             bid = self.owned[slot][bi]

@@ -195,6 +195,23 @@ class PrefillChunk:
 
 
 @dataclasses.dataclass
+class SpecVerify:
+    """One planned draft-then-verify decode step for ``seq``.
+
+    The engine feeds ``[output[-1], drafts...]`` as a (k+1)-token chunk
+    at ``pos_offset = start`` (the sequence's kv_len when planned),
+    samples every position from the verified logits with the per-token
+    keyed draws non-speculative decode would have used, and rolls the
+    rejected tail back by `BlockAllocator.truncate`.  ``start`` is
+    recorded because planning advances ``seq.kv_len`` optimistically by
+    ``len(drafts) + 1``."""
+
+    seq: Sequence
+    drafts: List[int]
+    start: int
+
+
+@dataclasses.dataclass
 class StepPlan:
     """What the engine must execute this step (then plans are discarded —
     the scheduler already advanced its accounting, so a plan is executed
@@ -203,6 +220,9 @@ class StepPlan:
     prefills: List[PrefillChunk] = dataclasses.field(default_factory=list)
     decodes: List[int] = dataclasses.field(default_factory=list)   # slot ids
     decode_uids: List[int] = dataclasses.field(default_factory=list)
+    # speculative verify steps — decode-phase work a plain decode would
+    # otherwise cover (a slot appears in decodes OR verifies, never both)
+    verifies: List[SpecVerify] = dataclasses.field(default_factory=list)
     preempted: List[int] = dataclasses.field(default_factory=list)  # uids
     rejected: List[Any] = dataclasses.field(default_factory=list)  # Requests
     # copy-on-write (src, dst) block pairs the engine must copy on-device
@@ -210,13 +230,16 @@ class StepPlan:
     cows: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     # (uid, cached_len) for admissions that mapped a cached prefix
     cached: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    # (uid, cached_len) for EVERY admission this step (cached_len = 0 on
+    # a prefix-cache miss) — per-request cache attribution in metrics
+    admitted: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
 
     def has_work(self) -> bool:
-        return bool(self.prefills or self.decodes)
+        return bool(self.prefills or self.decodes or self.verifies)
 
     def made_progress(self) -> bool:
-        return bool(self.prefills or self.decodes or self.preempted
-                    or self.rejected)
+        return bool(self.prefills or self.decodes or self.verifies
+                    or self.preempted or self.rejected)
 
     def summary(self) -> Dict[str, Any]:
         """Compact, host-only trace entry (engine.plan_log; tests assert
@@ -225,10 +248,13 @@ class StepPlan:
             "prefills": [(c.seq.req.uid, c.start, c.end)
                          for c in self.prefills],
             "decodes": list(self.decode_uids),
+            "verifies": [(v.seq.req.uid, v.start, len(v.drafts))
+                         for v in self.verifies],
             "preempted": list(self.preempted),
             "rejected": [r.uid for r in self.rejected],
             "cows": list(self.cows),
             "cached": list(self.cached),
+            "admitted": list(self.admitted),
         }
 
 
@@ -244,16 +270,27 @@ class Scheduler:
     def __init__(self, max_slots: int, max_seq: int,
                  pager: Optional[BlockAllocator] = None,
                  prefill_chunk_tokens: int = 512,
-                 preempt_limit: int = 3):
+                 preempt_limit: int = 3,
+                 spec_tokens: int = 0,
+                 draft_proposer: Any = None):
         if prefill_chunk_tokens < 1:
             raise ValueError("prefill_chunk_tokens must be >= 1")
         if preempt_limit < 1:
             raise ValueError("preempt_limit must be >= 1")
+        if spec_tokens < 0:
+            raise ValueError("spec_tokens must be >= 0")
+        if spec_tokens and pager is None:
+            raise ValueError("speculative decoding requires the paged "
+                             "pool (rollback is block truncation)")
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.pager = pager
         self.prefill_chunk_tokens = prefill_chunk_tokens
         self.preempt_limit = preempt_limit
+        # draft-then-verify decode: propose up to spec_tokens drafts per
+        # decode-eligible sequence each step (0 / no proposer = off)
+        self.spec_tokens = spec_tokens
+        self.proposer = draft_proposer
         self.waiting: Deque[Sequence] = deque()
         self.running: Dict[int, Sequence] = {}
         self.n_preempted = 0
@@ -302,10 +339,14 @@ class Scheduler:
         plan = StepPlan()
 
         # ---- decodes: every running seq past prefill, oldest first ----
+        # (a sequence with a planned verify step skips plain decode — the
+        # verify emits its next token(s); failed speculation falls back)
         cands = sorted(self.running.values(), key=lambda s: s.order)
         for seq in cands:
             if self.running.get(seq.slot) is not seq or not seq.prefill_done:
                 continue                     # preempted earlier this step
+            if self._plan_verify(seq, plan):
+                continue                     # spec verify covers this seq
             if not self._grow_for_decode(seq, plan):
                 continue                     # seq itself preempted / failed
             plan.decodes.append(seq.slot)
@@ -376,6 +417,7 @@ class Scheduler:
             self._order += 1
             self.running[seq.slot] = seq
             self.prefix_stats["admissions"] += 1
+            plan.admitted.append((seq.req.uid, cached_len if bids else 0))
             if bids:
                 self.pager.acquire_cached(seq.slot, bids)
                 seq.block_hashes = list(hashes)
@@ -583,6 +625,50 @@ class Scheduler:
         self.pager.ensure(seq.slot, seq.kv_len + 1)
         return True
 
+    def _plan_verify(self, seq: Sequence, plan: StepPlan) -> bool:
+        """Plan a draft-then-verify step for ``seq`` if speculation is on
+        and a useful draft exists; True iff a verify covers this seq's
+        decode this step.
+
+        Speculation is strictly *opportunistic*: it never preempts
+        anyone.  Under pool pressure the draft shrinks token by token
+        toward zero (the k+1 rows are priced by ``append_cost(..., n)``
+        against the free pool) and an empty draft falls back to the
+        plain decode path, which owns the preemption policy.  ``k`` is
+        further capped by the request's remaining output budget (a
+        verify step emits up to k+1 tokens) and by ``max_seq``
+        headroom."""
+        if self.spec_tokens <= 0 or self.proposer is None \
+                or self.pager is None:
+            return False
+        out = seq.output if seq.output is not None else []
+        if not out:
+            return False                     # decode re-feeds output[-1]
+        k = min(self.spec_tokens,
+                seq.req.max_new_tokens - len(out) - 1,
+                self.max_seq - 1 - seq.kv_len)
+        if k < 1:
+            return False
+        drafts = [int(t) for t in
+                  self.proposer.propose(seq.prompt, out, k)][:k]
+        while drafts and (self.pager.append_cost(
+                seq.slot, seq.kv_len, len(drafts) + 1)
+                > self.pager.n_free()):
+            drafts.pop()                     # shrink, never preempt
+        if not drafts:
+            return False
+        start = seq.kv_len
+        cow = self.pager.cow_for_append(seq.slot, start)
+        if cow is not None:
+            plan.cows.append(cow)
+        self.pager.ensure(seq.slot, start + len(drafts) + 1)
+        plan.verifies.append(SpecVerify(seq=seq, drafts=drafts,
+                                        start=start))
+        # optimistic: the engine resets kv_len to the accepted length
+        # and truncates the slot's lease list after the verify executes
+        seq.kv_len = start + len(drafts) + 1
+        return True
+
     def _plan_chunk(self, seq: Sequence, budget: int, plan: StepPlan) -> int:
         """Plan the next prompt chunk for ``seq`` under ``budget`` tokens;
         returns the number of tokens planned (0 = deferred)."""
@@ -623,6 +709,7 @@ class Scheduler:
             i = plan.decodes.index(seq.slot)
             plan.decodes.pop(i)
             plan.decode_uids.pop(i)
+        plan.verifies[:] = [v for v in plan.verifies if v.seq is not seq]
         plan.prefills[:] = [c for c in plan.prefills if c.seq is not seq]
 
     def _preempt_unit(self, seq: Sequence, plan: StepPlan) -> None:

@@ -1,0 +1,150 @@
+"""Draft proposers for speculative decoding (serving/engine.py).
+
+Speculation is draft-then-verify: a cheap proposer guesses up to ``k``
+next tokens for a running sequence, the engine verifies all of them in
+ONE multi-token device step (`models.transformer.verify_chunk_batch` —
+the same fused paged chunk-attention path prefill uses), and rejected
+tail tokens are rolled back by block-pool truncation
+(`BlockAllocator.truncate`).
+
+Correctness never depends on the draft: the acceptance rule re-samples
+every position from the *verified* logits with the same per-position
+keyed PRNG draws non-speculative decode would have used, so a perfect
+proposer only changes how many tokens land per step — never which
+tokens.  A proposer therefore has exactly one obligation: return
+plausible token ids cheaply.  ``propose`` must be pure w.r.t. the
+engine (no allocator or cache access); all sequence state it may use is
+the prompt and the accepted output so far.
+
+Two proposers ship:
+
+* :class:`NgramProposer` — prompt-lookup self-speculation (no second
+  model): find the most recent earlier occurrence of the sequence's
+  current n-gram suffix in its own prompt + output and propose the
+  tokens that followed it.  Free, surprisingly effective on repetitive
+  or quote-heavy continuations, and the serving default.
+* :class:`DraftModelProposer` — a small draft model (e.g. the reduced
+  ``llama2_110m`` config) greedily proposes ``k`` tokens behind the
+  same interface.  Stateless per call: it re-prefills the full context
+  into a dense scratch cache, so it trades host/device work for draft
+  quality — meant for real accelerators, not the CPU test rig.
+"""
+
+from __future__ import annotations
+
+from typing import List, Protocol, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class DraftProposer(Protocol):
+    """Anything with ``propose(prompt, output, k) -> list[int]``.
+
+    ``prompt`` is the request's token ids (np.ndarray), ``output`` the
+    accepted generated tokens so far (list of int; never includes
+    speculative tokens — rollback happens before the proposer sees the
+    sequence again).  Return at most ``k`` draft token ids; fewer (or
+    none) is always legal and simply shrinks the verify step toward
+    plain decode.
+    """
+
+    def propose(self, prompt: np.ndarray, output: List[int],
+                k: int) -> List[int]:
+        ...
+
+
+class NgramProposer:
+    """Prompt-lookup / n-gram self-speculation.
+
+    Match the longest suffix of the context (prompt + output, length
+    ``max_n`` down to ``min_n``) against its most recent earlier
+    occurrence and propose the continuation that followed that
+    occurrence.  No model, no state, O(context · n) per call on the
+    host.
+    """
+
+    name = "ngram"
+
+    def __init__(self, max_n: int = 3, min_n: int = 1,
+                 max_context: int = 1024):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+        self.max_context = max_context
+
+    def propose(self, prompt: np.ndarray, output: List[int],
+                k: int) -> List[int]:
+        if k <= 0:
+            return []
+        ctx = np.concatenate([np.asarray(prompt, np.int64),
+                              np.asarray(output or [], np.int64)])
+        if len(ctx) > self.max_context:
+            ctx = ctx[-self.max_context:]
+        n_ctx = len(ctx)
+        for n in range(min(self.max_n, n_ctx - 1), self.min_n - 1, -1):
+            suffix = ctx[n_ctx - n:]
+            # most recent earlier occurrence of the suffix (the match
+            # must end before the suffix starts so the continuation is
+            # a genuinely earlier context)
+            for i in range(n_ctx - n - 1, -1, -1):
+                if np.array_equal(ctx[i:i + n], suffix):
+                    cont = ctx[i + n:i + n + k]
+                    if len(cont):
+                        return [int(t) for t in cont]
+                    break
+        return []
+
+
+class DraftModelProposer:
+    """Greedy k-token proposals from a small draft model.
+
+    Holds a `models.model.Model` bundle + params and, per call,
+    prefills the full context into a fresh dense cache then rolls
+    ``k`` greedy decode steps.  The draft model's vocabulary must match
+    the target's (token ids are compared verbatim by the acceptance
+    rule).  Stateless across calls — preemption, rollback and fanout
+    need no proposer bookkeeping.
+    """
+
+    name = "draft_model"
+
+    def __init__(self, model, params, max_seq: int = 2048):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+
+    def propose(self, prompt: np.ndarray, output: List[int],
+                k: int) -> List[int]:
+        import jax.numpy as jnp
+
+        ctx = np.concatenate([np.asarray(prompt, np.int32),
+                              np.asarray(output or [], np.int32)])
+        k = min(k, self.max_seq - len(ctx))
+        if k <= 0:
+            return []
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(ctx)[None]},
+            max_seq=len(ctx) + k)
+        drafts: List[int] = []
+        for _ in range(k):
+            tok = int(np.argmax(np.asarray(logits)[0]))
+            drafts.append(tok)
+            if len(drafts) == k:
+                break
+            logits, cache = self.model.decode_step(
+                self.params, cache, jnp.asarray([tok], jnp.int32))
+        return drafts
+
+
+def build_proposer(kind: str, **kw) -> DraftProposer:
+    """Engine-facing factory: ``"ngram"`` (default) or ``"draft_model"``
+    (requires ``model=`` and ``params=`` kwargs)."""
+    if kind == "ngram":
+        return NgramProposer(**kw)
+    if kind == "draft_model":
+        return DraftModelProposer(**kw)
+    raise ValueError(f"unknown draft proposer {kind!r} "
+                     "(expected 'ngram' or 'draft_model')")

@@ -56,7 +56,7 @@ def model_params():
 
 def _serve_and_check(model, params, specs, n_pages, max_slots=4,
                      page_size=4, max_seq=48, chunk=8, faults=None,
-                     audit_interval=0):
+                     audit_interval=0, spec_tokens=0, draft_proposer=None):
     """Serve ``specs`` step-by-step, asserting the invariants above.
 
     Each spec is (prompt_len_index, n_samples, max_new_tokens, greedy,
@@ -69,7 +69,8 @@ def _serve_and_check(model, params, specs, n_pages, max_slots=4,
     eng = Engine(model, params, max_slots=max_slots, max_seq=max_seq,
                  page_size=page_size, n_pages=n_pages,
                  prefill_chunk_tokens=chunk, faults=faults,
-                 audit_interval=audit_interval)
+                 audit_interval=audit_interval, spec_tokens=spec_tokens,
+                 draft_proposer=draft_proposer)
     pager = eng.pager
 
     # -- instrumentation ------------------------------------------------
@@ -80,6 +81,21 @@ def _serve_and_check(model, params, specs, n_pages, max_slots=4,
     orig_register = pager.register_block
 
     def register_epoch(slot, block_index, h, tokens):
+        # no speculative KV ever reaches the prefix index: a block may
+        # only register when it sits entirely below the sequence's
+        # (already rolled-back) kv_len and holds exactly the committed
+        # stream's token ids — a registration attempted before a verify
+        # rollback would trip both assertions
+        seq = eng.scheduler.running.get(slot)
+        if seq is not None:
+            bs = pager.cfg.block_size
+            lo = block_index * bs
+            assert lo + bs <= seq.kv_len, \
+                f"block {block_index} registers past kv_len {seq.kv_len}"
+            ids = np.concatenate(
+                [seq.prompt, np.asarray(seq.output or [], np.int32)])
+            assert np.array_equal(np.asarray(tokens), ids[lo:lo + bs]), \
+                "registered block content is not the committed stream"
         orig_register(slot, block_index, h, tokens)
         bid = pager.owned[slot][block_index]
         if pager.block_hash[bid] is not None:
@@ -228,3 +244,63 @@ class TestEngineInvariantProperties:
         assert eng.metrics["cow_copies"] > 0
         ok = [r for r in by_uid.values() if r.error is None]
         assert ok, "at least some groups must complete on 10 blocks"
+
+
+class _FlakyProposer:
+    """Deterministically random-quality drafts: per call, nothing,
+    garbage token ids (always rejected — maximal rollback), or n-gram
+    self-speculation (sometimes accepted once the untrained model starts
+    looping).  The point is a random accept/reject schedule, not draft
+    quality."""
+
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+        from repro.serving.spec_decode import NgramProposer
+        self.ngram = NgramProposer()
+
+    def propose(self, prompt, output, k):
+        r = int(self.rng.integers(0, 4))
+        if r == 0:
+            return []
+        if r == 1:
+            return [int(t) for t in self.rng.integers(4, 500, size=k)]
+        return self.ngram.propose(prompt, output, k)
+
+
+class TestSpecDecodeRollbackProperties:
+    """Rollback-as-truncation under random accept/reject schedules on
+    tiny pools: every step's ``audit().clean`` (via ``debug_check``),
+    registered blocks hold only committed tokens (the wrapped
+    ``register_block`` above — speculative KV can never reach the prefix
+    index), and the drained pool leaks nothing — while speculation
+    interleaves with admission deferral, preemption, fanout and COW."""
+
+    @settings(max_examples=5, deadline=None, derandomize=True)
+    @given(specs=st.lists(SPEC, min_size=1, max_size=4),
+           pool=st.integers(8, 16), k=st.integers(1, 3),
+           pseed=st.integers(0, 9))
+    def test_random_accept_reject_prop(self, model_params, specs, pool,
+                                       k, pseed):
+        model, params = model_params
+        _serve_and_check(model, params, specs, n_pages=pool,
+                         spec_tokens=k,
+                         draft_proposer=_FlakyProposer(pseed))
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_random_accept_reject_seeded(self, model_params, seed):
+        """Deterministic twin (pinned by ci/run_ci.sh on the
+        hypothesis-less CI image) — asserts the traffic genuinely
+        speculated and rolled back, so the property is not vacuous."""
+        model, params = model_params
+        rng = np.random.default_rng(100 + seed)
+        specs = [(int(rng.integers(0, len(PROMPT_LENS))),
+                  int(rng.integers(1, 4)), int(rng.integers(3, 7)),
+                  bool(rng.integers(0, 2)), int(rng.integers(0, 100)))
+                 for _ in range(4)]
+        pool = 9 + int(rng.integers(0, 6))
+        eng, _ = _serve_and_check(model, params, specs, n_pages=pool,
+                                  spec_tokens=2,
+                                  draft_proposer=_FlakyProposer(seed))
+        assert eng.metrics["draft_tokens"] > 0
+        assert eng.metrics["spec_rollbacks"] > 0
+        assert eng.metrics["verify_steps"] > 0
