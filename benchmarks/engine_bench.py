@@ -39,7 +39,17 @@ exercise the scheduler subsystem end to end:
     one request per fault class: reports goodput (surviving tokens),
     blast radius per fault, leaked blocks after the faulted drain, and
     the two bit-exactness flags CI gates on (idle fault layer and fault
-    survivors must both match the fault-free streams exactly).
+    survivors must both match the fault-free streams exactly),
+  * **open_loop** — continuous-arrival serving through the async
+    front-end (serving/async_serving.py): a seeded Poisson schedule at
+    a rate calibrated to a fraction of measured closed-loop capacity,
+    requests arriving and streaming back mid-flight.  Reports goodput
+    and TTFT/TPOT percentiles measured from TRUE arrival time (the
+    queueing-delay-aware numbers the drain-time workloads cannot see),
+    plus the closed-vs-open bit-exactness flag, the
+    negative-latency-sample count (the ``t_first_token == 0.0`` filter
+    regression guard) and the prefill compile count under continuous
+    arrivals — all CI-gated.
 
 Writes machine-readable JSON (``BENCH_engine.json``, emitted into the CI
 artifacts dir by ci/run_ci.sh) so the trajectory of serving-level
@@ -109,6 +119,17 @@ LC_PAGE_SIZE = 16
 LC_MAX_NEW = 4
 LC_COMPILE_BOUND = 1         # same per-pool-key bound as shape_churn
 
+# open-loop workload: OL_REQUESTS requests on a seeded Poisson schedule
+# whose rate is OL_LOAD_FACTOR of measured closed-loop capacity (the
+# closed pass doubles as the bit-exactness reference), plus one
+# malformed request mid-schedule whose t_first_token stays 0.0 — the
+# latency-filter regression guard (neg_latency_samples must be 0)
+OL_REQUESTS = 12
+OL_MAX_NEW = 8
+OL_LOAD_FACTOR = 0.8
+OL_SEED = 17
+OL_COMPILE_BOUND = 0         # continuous arrivals over the closed pass
+
 
 def _build_model():
     import jax
@@ -127,6 +148,7 @@ def run_shared_prefix(model, params, quiet: bool = False,
     """Serve SP_REQUESTS requests over SP_SYSTEM_PROMPTS shared system
     prompts twice — prefix caching on, then off — and report what the
     cache bought: hit rate, prefill tokens/blocks saved, TTFT deltas."""
+    from repro.serving.async_serving import first_token_latencies
     from repro.serving.engine import Engine
 
     rng = np.random.default_rng(1)
@@ -157,8 +179,11 @@ def run_shared_prefix(model, params, quiet: bool = False,
                            temperature=0.0) for p in prompts]
         done = {r.uid: r for r in eng.run()}
         assert all(done[u].error is None for u in uids)
-        ttft = np.array([done[u].t_first_token - done[u].t_enqueue
-                         for u in uids]) * 1e3
+        # via the filtered helper: a request that never produced a first
+        # token keeps t_first_token == 0.0 and must not contribute a
+        # (hugely negative) sample to the percentiles
+        ttft = first_token_latencies([done[u] for u in uids]) * 1e3
+        assert len(ttft) == len(uids)
         dstats = {k: eng.scheduler.prefix_stats[k] - stats0[k]
                   for k in stats0}
         dstats["hit_blocks"] = eng.pager.stats["hit_blocks"] - blocks0
@@ -313,6 +338,7 @@ def run_shape_churn(model, params, quiet: bool = False,
     happens); TTFT is measured on a second, warm pass so the percentiles
     track steady-state prefill latency rather than the one-time compile
     the cold pass exists to bound."""
+    from repro.serving.async_serving import first_token_latencies
     from repro.serving.engine import Engine, legacy_chunk_shape_keys
 
     rng = np.random.default_rng(7)
@@ -331,8 +357,9 @@ def run_shape_churn(model, params, quiet: bool = False,
             for p in prompts]              # warm pass: TTFT percentiles
     done = {r.uid: r for r in eng.run()}
     assert all(done[u].error is None for u in uids)
-    ttft = np.array([done[u].t_first_token - done[u].t_enqueue
-                     for u in uids]) * 1e3
+    # filtered helper: no request without a first token may contribute
+    ttft = first_token_latencies([done[u] for u in uids]) * 1e3
+    assert len(ttft) == len(uids)
 
     legacy = legacy_chunk_shape_keys(eng.plan_log)
 
@@ -374,6 +401,7 @@ def run_long_context(model, params, quiet: bool = False) -> dict:
     import jax.numpy as jnp
 
     from repro.models import transformer
+    from repro.serving.async_serving import first_token_latencies
     from repro.serving.engine import Engine
 
     rng = np.random.default_rng(11)
@@ -428,8 +456,9 @@ def run_long_context(model, params, quiet: bool = False) -> dict:
             del os.environ["REPRO_FUSED_PREFILL"]
         else:
             os.environ["REPRO_FUSED_PREFILL"] = prev
-    ttft = np.array([done[u].t_first_token - done[u].t_enqueue
-                     for u in uids]) * 1e3
+    # filtered helper: no request without a first token may contribute
+    ttft = first_token_latencies([done[u] for u in uids]) * 1e3
+    assert len(ttft) == len(uids)
     saved = (eng.metrics["prefix_attn_bytes_gather"]
              - eng.metrics["prefix_attn_bytes"])
     bitexact = bool(np.array_equal(np.asarray(l_chunk),
@@ -708,8 +737,122 @@ def run_fault_tolerance(model, params, quiet: bool = False) -> dict:
     return result
 
 
+def run_open_loop_serving(model, params, quiet: bool = False) -> dict:
+    """Continuous-arrival serving under load: OL_REQUESTS requests on a
+    seeded Poisson schedule served through the async front-end
+    (mid-flight submission, per-step streaming, the dispatch→sync
+    overlap window), measured OPEN loop — goodput plus TTFT/TPOT
+    percentiles charged from TRUE arrival time, the queueing-delay-aware
+    numbers the drain-style workloads structurally cannot see.
+
+    The same arrival order submitted up front and drained closed-loop
+    provides both the rate calibration (arrivals at OL_LOAD_FACTOR of
+    measured capacity) and the reference streams.  One malformed request
+    is inserted mid-schedule: it is rejected with ``t_first_token`` left
+    at 0.0, and ``neg_latency_samples`` proves the latency filter kept
+    it out of the percentiles.  CI gates: bit-exactness vs closed,
+    nonzero goodput, zero negative latency samples, and no prefill
+    executables beyond what the closed pass compiled."""
+    import time
+
+    from repro.serving.async_serving import poisson_arrivals, run_open_loop
+    from repro.serving.engine import Engine
+
+    rng = np.random.default_rng(OL_SEED)
+    prompts = [rng.integers(4, 500, size=int(rng.integers(8, 24)))
+               .astype(np.int32) for _ in range(OL_REQUESTS)]
+    kws = [{"max_new_tokens": OL_MAX_NEW, "seed": 1000 + i,
+            "temperature": 0.0 if i % 2 == 0 else 1.0}
+           for i in range(OL_REQUESTS)]
+
+    def make_engine():
+        return Engine(model, params, max_slots=4, max_seq=128,
+                      page_size=16, prefill_chunk_tokens=32)
+
+    def streams(req):
+        outs = req.outputs if req.outputs is not None else [req.output or []]
+        return tuple(tuple(o) for o in outs)
+
+    # closed-loop pass: rate calibration + bit-exactness reference
+    eng_c = make_engine()
+    for p, kw in zip(prompts, kws):
+        eng_c.submit(p, **kw)
+    t0 = time.perf_counter()
+    done_c = sorted(eng_c.run(), key=lambda r: r.uid)
+    t_closed = max(time.perf_counter() - t0, 1e-6)
+    assert all(r.error is None for r in done_c)
+    ref = [streams(r) for r in done_c]
+    rate = OL_LOAD_FACTOR * OL_REQUESTS / t_closed
+    # compile baseline AFTER the closed pass: the gate is that
+    # continuous arrivals reuse the closed pass's executables
+    compiles0 = eng_c.prefill_compile_count()
+
+    arrivals = poisson_arrivals(OL_SEED, OL_REQUESTS, rate)
+    workload = [(float(t), p, kw)
+                for t, p, kw in zip(arrivals, prompts, kws)]
+    # the malformed mid-schedule request: rejected at submit, its
+    # t_first_token stays 0.0 — the latency-filter regression guard
+    bad_at = OL_REQUESTS // 2
+    workload.insert(bad_at, (workload[bad_at][0], np.zeros(0, np.int32),
+                             {"max_new_tokens": OL_MAX_NEW}))
+
+    eng_o = make_engine()
+    handles, report = run_open_loop(eng_o, workload)
+    valid = [h for i, h in enumerate(handles) if i != bad_at]
+    bitexact = [streams(h.req) for h in valid] == ref
+    rejected = handles[bad_at].req
+    assert rejected.error is not None
+    assert rejected.t_first_token == 0.0
+    compiles = eng_o.prefill_compile_count() - compiles0
+
+    result = {
+        "requests": OL_REQUESTS,
+        "invalid_requests": 1,
+        "max_new_tokens": OL_MAX_NEW,
+        "load_factor": OL_LOAD_FACTOR,
+        "arrival_seed": OL_SEED,
+        "arrival_rate_req_s": float(report.arrival_rate_req_s),
+        "closed_wall_s": float(t_closed),
+        "wall_s": float(report.wall_s),
+        "completed_ok": report.completed_ok,
+        "failed": report.failed,
+        "goodput_tok_s": float(report.goodput_tok_s),
+        "goodput_req_s": float(report.goodput_req_s),
+        "ttft_ms_p50": report.ttft_ms["p50"],
+        "ttft_ms_p95": report.ttft_ms["p95"],
+        "ttft_ms_p99": report.ttft_ms["p99"],
+        "tpot_ms_p50": report.tpot_ms["p50"],
+        "tpot_ms_p99": report.tpot_ms["p99"],
+        "neg_latency_samples": report.neg_latency_samples,
+        "midflight_submits": report.midflight_submits,
+        "peak_queue_depth": report.peak_queue_depth,
+        "closed_vs_open_bitexact": bool(bitexact),
+        "prefill_compiles": compiles,
+        "compile_bound": OL_COMPILE_BOUND,
+    }
+    if not quiet:
+        print(f"enginebench/open_loop_goodput_tok_s,"
+              f"{result['goodput_tok_s']:.1f},tok/s"
+              f" ({result['goodput_req_s']:.2f} req/s ok at offered"
+              f" {result['arrival_rate_req_s']:.2f} req/s,"
+              f" {result['midflight_submits']} mid-flight arrivals)")
+        print(f"enginebench/open_loop_ttft_ms_p50,"
+              f"{result['ttft_ms_p50']:.1f},ms"
+              f" (p99 {result['ttft_ms_p99']:.1f}; from true arrival)")
+        print(f"enginebench/open_loop_tpot_ms_p50,"
+              f"{result['tpot_ms_p50']:.1f},ms"
+              f" (p99 {result['tpot_ms_p99']:.1f})")
+        print(f"enginebench/open_loop_bitexact,"
+              f"{int(result['closed_vs_open_bitexact'])},bool"
+              f" ({result['neg_latency_samples']} negative latency"
+              f" samples, {result['prefill_compiles']} extra prefill"
+              f" compiles)")
+    return result
+
+
 def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         max_new_tokens: int = 16) -> dict:
+    from repro.serving.async_serving import first_token_latencies
     from repro.serving.engine import Engine
 
     model, params = _build_model()
@@ -730,7 +873,9 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     ok = [r for r in done if r.error is None]
     assert len(ok) == len(PROMPT_LENS), \
         [r.error for r in done if r.error is not None]
-    ttft_ms = np.array([(r.t_first_token - r.t_enqueue) for r in ok]) * 1e3
+    # filtered helper: no request without a first token may contribute
+    ttft_ms = first_token_latencies(ok) * 1e3
+    assert len(ttft_ms) == len(ok)
 
     result = {
         "requests": len(done),
@@ -759,6 +904,7 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     result["fault_tolerance"] = run_fault_tolerance(model, params,
                                                     quiet=quiet)
     result["spec_decode"] = run_spec_decode(model, params, quiet=quiet)
+    result["open_loop"] = run_open_loop_serving(model, params, quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:

@@ -182,4 +182,39 @@ if not sd["greedy_bitexact"] or not sd["mixed_greedy_bitexact"]:
 if sd["verify_compiles"] > sd["compile_bound"]:
     sys.exit(f"FAIL: verify chunk compiled {sd['verify_compiles']}x "
              f"(documented bound: {sd['compile_bound']} per pool key)")
+ol = bench["open_loop"]
+print(f"  open loop: goodput={ol['goodput_tok_s']:.1f} tok/s "
+      f"({ol['goodput_req_s']:.2f} req/s ok at offered "
+      f"{ol['arrival_rate_req_s']:.2f} req/s) "
+      f"ttft_ms p50={ol['ttft_ms_p50']:.1f} p99={ol['ttft_ms_p99']:.1f} "
+      f"tpot_ms p50={ol['tpot_ms_p50']:.1f} "
+      f"midflight={ol['midflight_submits']} "
+      f"bitexact={ol['closed_vs_open_bitexact']} "
+      f"neg_samples={ol['neg_latency_samples']} "
+      f"compiles={ol['prefill_compiles']} (bound {ol['compile_bound']})")
+# Open-loop tripwires: (a) continuous Poisson arrivals must complete
+# error-free requests — zero goodput means the async front-end stalled
+# or every request failed; (b) no latency sample may be negative — a
+# negative TTFT/TPOT means a request with t_first_token == 0.0 (never
+# produced a first token) leaked past the filter and is corrupting the
+# percentiles (the serve.py latency-accounting bugfix's gate); (c) the
+# open-loop streams must stay bit-identical to the closed-loop run of
+# the same arrival order — mid-flight arrival must never change what a
+# request samples; (d) continuous arrivals must reuse the closed pass's
+# prefill executables (zero extra compiles).
+if ol["goodput_tok_s"] <= 0 or ol["completed_ok"] <= 0:
+    sys.exit("FAIL: open-loop workload completed no error-free tokens — "
+             "the continuous-arrival front-end is broken")
+if ol["neg_latency_samples"] != 0:
+    sys.exit(f"FAIL: open-loop workload reports "
+             f"{ol['neg_latency_samples']} negative latency samples — a "
+             f"request without a first token leaked into the percentiles")
+if not ol["closed_vs_open_bitexact"]:
+    sys.exit("FAIL: open-loop streams diverged from the closed-loop run "
+             "of the same arrival order — mid-flight arrival changed "
+             "what a request sampled")
+if ol["prefill_compiles"] > ol["compile_bound"]:
+    sys.exit(f"FAIL: continuous arrivals compiled "
+             f"{ol['prefill_compiles']} extra prefill executables "
+             f"(bound {ol['compile_bound']}: reuse the closed pass's)")
 EOF

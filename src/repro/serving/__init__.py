@@ -1,4 +1,8 @@
 """Serving: continuous batching engine + sampling (paper A.1 settings)."""
+from repro.serving.async_serving import (AsyncServer, OpenLoopReport,
+                                         StreamHandle, first_token_latencies,
+                                         latency_summary_ms, poisson_arrivals,
+                                         run_open_loop, time_per_output_token)
 from repro.serving.engine import Engine, Request, sample_logits
 from repro.serving.faults import (FaultInjector, FaultPlan, SchedulerStall,
                                   SimClock)

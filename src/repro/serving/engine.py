@@ -238,6 +238,33 @@ def _copy_pool_blocks(attn, src, dst):
     return {kk: buf.at[:, dst].set(buf[:, src]) for kk, buf in attn.items()}
 
 
+@dataclasses.dataclass
+class _PendingDecode:
+    """A dispatched-but-unsynced batched decode step.  ``nxt`` and
+    ``finite`` are still device arrays (JAX async dispatch): the host
+    has NOT blocked on the sampled tokens yet.  ``_decode_complete``
+    converts them and runs all token-dependent bookkeeping."""
+
+    slots: List[int]
+    failed: List["Request"]
+    nxt: Any = None                 # device array of sampled tokens
+    finite: Any = None              # device array, per-row finiteness
+    t0: float = 0.0
+
+
+@dataclasses.dataclass
+class _PendingStep:
+    """An engine step whose decode host-sync was deferred by
+    :meth:`Engine.step_async`.  Everything token-independent (plan,
+    prefill chunks, COW copies, device dispatch of decode + sampling)
+    already ran; :meth:`Engine.finish_step` blocks on the tokens and
+    finishes the step's bookkeeping."""
+
+    decode: _PendingDecode
+    plan: Any
+    t_step: float
+
+
 class Engine:
     """Single-host continuous-batching engine (plan executor).
 
@@ -388,6 +415,8 @@ class Engine:
         #                                    key their schedules on it)
         self._rejected: List[Request] = [] # submit-time rejections, drained
         #                                    into run()'s done list
+        self._pending: Optional[_PendingStep] = None  # step_async() in
+        #                                    flight, awaiting finish_step()
         self._stall_streak = 0
         self._preempt_streak = 0
         if self.faults is not None:
@@ -401,10 +430,20 @@ class Engine:
         dense cache, prompts that could never fit the pool) get
         ``.error`` set here and come back from the next :meth:`run`
         without ever entering the scheduler; admission re-checks as the
-        run-time backstop."""
+        run-time backstop.
+
+        Legal at ANY time, including between :meth:`step_async` and
+        :meth:`finish_step` while a device step is in flight — the
+        arrival enters the waiting queue and is considered at the next
+        ``schedule()``.  Pass ``t_enqueue`` to stamp the request's TRUE
+        arrival time (open-loop serving releases arrivals between
+        steps, possibly after their scheduled instant; queueing delay
+        and deadlines must be charged from arrival, not release)."""
         self._uid += 1
+        t_enq = kw.pop("t_enqueue", None)
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      t_enqueue=self._now(), output=[], **kw)
+                      t_enqueue=self._now() if t_enq is None else t_enq,
+                      output=[], **kw)
         if req.seed is not None:
             req.rng_key = jax.random.PRNGKey(req.seed)
         else:
@@ -418,6 +457,17 @@ class Engine:
         self.scheduler.add(req)
         return req.uid
 
+    def submit_request(self, prompt: np.ndarray, **kw) -> Request:
+        """:meth:`submit`, but returning the :class:`Request` object
+        itself.  The async front-end holds it to stream ``output`` /
+        ``outputs`` deltas per step while the request is mid-flight."""
+        uid = self.submit(prompt, **kw)
+        if self._rejected and self._rejected[-1].uid == uid:
+            return self._rejected[-1]
+        req = self.scheduler.request(uid)
+        assert req is not None, f"submitted uid {uid} vanished"
+        return req
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Serve until the scheduler drains.  Rejected requests (clamped
         ``max_new_tokens``, empty prompt, or a sequence the pool could
@@ -425,7 +475,69 @@ class Engine:
         do requests failed mid-flight by the fault layer (persistent
         step faults, NaN rows, deadline expiry, audit quarantine, load
         shedding), each with a typed ``.error_kind`` while the rest of
-        the batch keeps serving."""
+        the batch keeps serving.
+
+        ``run()`` is the closed-loop surface: a plain loop over
+        :meth:`step`.  Continuous-arrival serving drives
+        :meth:`step_async` / :meth:`finish_step` instead (see
+        serving/async_serving.py)."""
+        done: List[Request] = []
+        for _ in range(max_steps):
+            out = self.step()
+            if out is None:
+                break
+            done.extend(out)
+        return done
+
+    def step(self) -> Optional[List[Request]]:
+        """Execute ONE scheduler step synchronously: drain submit-time
+        rejections, schedule, run the planned chunk/decode/verify work,
+        and return the requests that completed or failed during the
+        step (possibly an empty list).  Returns ``None`` when the
+        engine is idle — no queued rejections and no scheduler work."""
+        done, pending = self._step_impl(sync=True)
+        assert pending is None
+        return done
+
+    def step_async(self):
+        """Like :meth:`step`, but WITHOUT blocking on the decode's
+        sampled tokens: returns ``(done, pending)`` where ``pending``
+        (when not None) holds the dispatched-but-unsynced device work.
+        JAX async dispatch means the device is computing the decode and
+        the per-row sampling while the host is free — the front-end
+        uses that window to ingest new arrivals and flush streamed
+        tokens from earlier steps, then calls :meth:`finish_step` to
+        block on the tokens and finish the token-dependent bookkeeping
+        (append, block registration, stop detection).  Steps whose host
+        effects are token-coupled within the step (speculative
+        verifies, the fault layer's intra-step isolation) run fully
+        synchronously and return ``pending=None``."""
+        return self._step_impl(sync=False)
+
+    def finish_step(self, pending: Optional[_PendingStep] = None
+                    ) -> List[Request]:
+        """Complete a :meth:`step_async` step: block on the sampled
+        tokens, append them, register completed blocks, retire stops,
+        and close out the step's accounting.  No-op (returns ``[]``)
+        when nothing is pending."""
+        if pending is None:
+            pending = self._pending
+        if pending is None:
+            return []
+        self._pending = None
+        done = self._decode_complete(pending.decode)
+        self._step_tail(pending.plan, pending.t_step)
+        return done
+
+    def _step_impl(self, sync: bool):
+        """One scheduler step.  Returns ``(done, pending)``;
+        ``done is None`` means the engine was idle.  ``sync=False``
+        defers the decode host-sync into ``pending`` when the step
+        allows it (see :meth:`step_async`)."""
+        if self._pending is not None:
+            raise RuntimeError(
+                "finish_step() must complete the in-flight step before "
+                "the next one is dispatched")
         done: List[Request] = []
         if self._rejected:
             now = self._now()
@@ -434,131 +546,148 @@ class Engine:
                 self.metrics["requests_rejected"] += 1
                 done.append(req)
             self._rejected = []
-        for _ in range(max_steps):
+        if not self.scheduler.has_work():
+            return (done if done else None), None
+        self._step += 1
+        stalled = (self.faults is not None
+                   and self.faults.pre_step(self._step, self.scheduler))
+        if (self.paged and self.audit_interval
+                and self._step % self.audit_interval == 0):
+            # BEFORE schedule(): a corrupted block must be caught and
+            # quarantined before the allocator can hand it out again
+            done.extend(self._run_audit())
             if not self.scheduler.has_work():
-                break
-            self._step += 1
-            stalled = (self.faults is not None
-                       and self.faults.pre_step(self._step, self.scheduler))
-            if (self.paged and self.audit_interval
-                    and self._step % self.audit_interval == 0):
-                # BEFORE schedule(): a corrupted block must be caught and
-                # quarantined before the allocator can hand it out again
-                done.extend(self._run_audit())
-                if not self.scheduler.has_work():
-                    break
-            # an injected stall skips scheduling — the engine sees the
-            # idle plan a wedged scheduler would have produced
-            plan = StepPlan() if stalled else self.scheduler.schedule()
-            now = self._now()
-            for req in plan.rejected:
-                req.t_done = now
-                self.metrics["requests_rejected"] += 1
-                done.append(req)
-            expired = self._enforce_deadlines(plan)
-            done.extend(expired)
-            if not plan.made_progress() and not expired:
-                # the scheduler's contract is defer-preempt-or-reject; an
-                # idle plan with work pending means that contract broke.
-                # Fault layer on: degrade (shed the lowest-value waiter,
-                # keep serving) — off: raise the typed stall with the
-                # queue snapshot (the seed engine spun here).
-                done.extend(self._handle_stall(stalled))
-                continue
-            self._stall_streak = 0
-            if plan.preempted and self.shed_after_preempts is not None:
-                self._preempt_streak += 1
-                if self._preempt_streak >= self.shed_after_preempts:
-                    # preemption thrash: repeated evict/recompute cycles
-                    # mean demand exceeds the pool — shed load instead
-                    done.extend(self._shed(
-                        f"{self._preempt_streak} consecutive preempting "
-                        "steps (thrash)"))
-                    self._preempt_streak = 0
-            elif not plan.preempted:
+                return done, None
+        # an injected stall skips scheduling — the engine sees the
+        # idle plan a wedged scheduler would have produced
+        plan = StepPlan() if stalled else self.scheduler.schedule()
+        now = self._now()
+        for req in plan.rejected:
+            req.t_done = now
+            self.metrics["requests_rejected"] += 1
+            done.append(req)
+        expired = self._enforce_deadlines(plan)
+        done.extend(expired)
+        if not plan.made_progress() and not expired:
+            # the scheduler's contract is defer-preempt-or-reject; an
+            # idle plan with work pending means that contract broke.
+            # Fault layer on: degrade (shed the lowest-value waiter,
+            # keep serving) — off: raise the typed stall with the
+            # queue snapshot (the seed engine spun here).
+            done.extend(self._handle_stall(stalled))
+            return done, None
+        self._stall_streak = 0
+        if plan.preempted and self.shed_after_preempts is not None:
+            self._preempt_streak += 1
+            if self._preempt_streak >= self.shed_after_preempts:
+                # preemption thrash: repeated evict/recompute cycles
+                # mean demand exceeds the pool — shed load instead
+                done.extend(self._shed(
+                    f"{self._preempt_streak} consecutive preempting "
+                    "steps (thrash)"))
                 self._preempt_streak = 0
-            self.plan_log.append(plan.summary())
-            for uid, cached in plan.admitted:
-                # first admission wins: a preempt-resume re-admission must
-                # not overwrite the request's original cache attribution
-                self.metrics["requests"].setdefault(
-                    uid, {"cached_tokens": int(cached),
-                          "cache_hit": cached > 0})
-            self.metrics["preemptions"] = self.scheduler.n_preempted
-            self.metrics["prefix_hits"] = \
-                self.scheduler.prefix_stats["hits"]
-            self.metrics["prefix_cached_tokens"] = \
-                self.scheduler.prefix_stats["cached_tokens"]
-            if self.paged:
-                self.metrics["prefix_evictions"] = \
-                    self.pager.stats["evictions"]
-            if self.paged and plan.has_work():
-                # one republish per step covers this step's allocations,
-                # COW remaps, and any releases (finish/preempt) since the
-                # last one; the host copy is kept for chunk addressing so
-                # the batched calls never read the table back off-device.
-                self._host_pt = self.pager.page_table()
-                self.cache["page_table"] = jnp.asarray(self._host_pt)
-            if self.paged and plan.cows:
-                # copy-on-write: duplicate the shared blocks' rows before
-                # this step's writes land in the fresh copies.  (Counted
-                # here, not from allocator stats — a retracted victim's
-                # pair never reaches execution.)
-                src = jnp.asarray([s for s, _ in plan.cows], jnp.int32)
-                dst = jnp.asarray([d for _, d in plan.cows], jnp.int32)
-                self.cache["attn"] = _copy_pool_blocks(
-                    self.cache["attn"], src, dst)
-                self.metrics["cow_copies"] += len(plan.cows)
-            t_step = self._now()
-            if plan.prefills:
-                done.extend(self._run_chunks(plan.prefills))
-                # shape-stability probe: the chunk step's distinct-XLA-
-                # executable count must stay pinned at one per pool key
-                # however traffic churns chunk lengths / offsets / batch
-                # width (gated by tests + the shape_churn benchmark)
-                self.metrics["prefill_compiles"] = \
-                    self.prefill_compile_count()
-                self.plan_log[-1]["prefill_compiles"] = \
-                    self.metrics["prefill_compiles"]
-            if self._done_at_prefill:
-                # sequences whose FIRST sampled token was terminal (stop
-                # id / eos / max_new_tokens=1) retired inside the chunk
-                done.extend(self._done_at_prefill)
-                self._done_at_prefill = []
-            if plan.decodes:
+        elif not plan.preempted:
+            self._preempt_streak = 0
+        self.plan_log.append(plan.summary())
+        for uid, cached in plan.admitted:
+            # first admission wins: a preempt-resume re-admission must
+            # not overwrite the request's original cache attribution
+            self.metrics["requests"].setdefault(
+                uid, {"cached_tokens": int(cached),
+                      "cache_hit": cached > 0})
+        self.metrics["preemptions"] = self.scheduler.n_preempted
+        self.metrics["prefix_hits"] = \
+            self.scheduler.prefix_stats["hits"]
+        self.metrics["prefix_cached_tokens"] = \
+            self.scheduler.prefix_stats["cached_tokens"]
+        if self.paged:
+            self.metrics["prefix_evictions"] = \
+                self.pager.stats["evictions"]
+        if self.paged and plan.has_work():
+            # one republish per step covers this step's allocations,
+            # COW remaps, and any releases (finish/preempt) since the
+            # last one; the host copy is kept for chunk addressing so
+            # the batched calls never read the table back off-device.
+            self._host_pt = self.pager.page_table()
+            self.cache["page_table"] = jnp.asarray(self._host_pt)
+        if self.paged and plan.cows:
+            # copy-on-write: duplicate the shared blocks' rows before
+            # this step's writes land in the fresh copies.  (Counted
+            # here, not from allocator stats — a retracted victim's
+            # pair never reaches execution.)
+            src = jnp.asarray([s for s, _ in plan.cows], jnp.int32)
+            dst = jnp.asarray([d for _, d in plan.cows], jnp.int32)
+            self.cache["attn"] = _copy_pool_blocks(
+                self.cache["attn"], src, dst)
+            self.metrics["cow_copies"] += len(plan.cows)
+        t_step = self._now()
+        if plan.prefills:
+            done.extend(self._run_chunks(plan.prefills))
+            # shape-stability probe: the chunk step's distinct-XLA-
+            # executable count must stay pinned at one per pool key
+            # however traffic churns chunk lengths / offsets / batch
+            # width (gated by tests + the shape_churn benchmark)
+            self.metrics["prefill_compiles"] = \
+                self.prefill_compile_count()
+            self.plan_log[-1]["prefill_compiles"] = \
+                self.metrics["prefill_compiles"]
+        if self._done_at_prefill:
+            # sequences whose FIRST sampled token was terminal (stop
+            # id / eos / max_new_tokens=1) retired inside the chunk
+            done.extend(self._done_at_prefill)
+            self._done_at_prefill = []
+        if plan.decodes:
+            if sync or plan.verifies or self.faults is not None:
                 done.extend(self._decode_once(plan.decodes))
-            if plan.verifies:
-                # AFTER decodes: a verify's truncation frees blocks that
-                # only re-enter circulation at the next schedule(), so
-                # nothing executed this step can observe the rollback
-                done.extend(self._run_verifies(plan.verifies))
-                self.metrics["verify_compiles"] = \
-                    self.verify_compile_count()
-                self.plan_log[-1]["verify_compiles"] = \
-                    self.metrics["verify_compiles"]
-            drafted = self.metrics["draft_tokens"]
-            self.metrics["accept_ratio"] = (
-                self.metrics["accepted_tokens"] / drafted if drafted
-                else 0.0)
-            self.metrics["steps_per_token"] = (
-                self.metrics["seq_steps"]
-                / max(1, self.metrics["tokens_out"]))
-            if plan.has_work() and self.straggler.record_slow(
-                    0, self._now() - t_step):
-                self.metrics["slow_steps"] += 1
-            if self.paged:
-                # fork-sharing accounting: each lease beyond a block's
-                # first is a block NOT copied (shared prompt KV)
-                live = shared = 0
-                for rc in self.pager.refcount:
-                    if rc > 0:
-                        live += 1
-                        shared += rc - 1
-                self.metrics["blocks_live_peak"] = max(
-                    self.metrics["blocks_live_peak"], live)
-                self.metrics["blocks_saved_by_sharing_peak"] = max(
-                    self.metrics["blocks_saved_by_sharing_peak"], shared)
-        return done
+            else:
+                # pipelined: decode + sampling are dispatched (device
+                # busy), the host returns WITHOUT blocking on tokens.
+                # Verify steps are excluded — their truncate/register
+                # ordering is token-coupled within the step — as is the
+                # fault layer, whose intra-step isolation hooks must
+                # observe each row's outcome before the step closes.
+                self._pending = _PendingStep(
+                    decode=self._decode_dispatch(plan.decodes),
+                    plan=plan, t_step=t_step)
+                return done, self._pending
+        if plan.verifies:
+            # AFTER decodes: a verify's truncation frees blocks that
+            # only re-enter circulation at the next schedule(), so
+            # nothing executed this step can observe the rollback
+            done.extend(self._run_verifies(plan.verifies))
+            self.metrics["verify_compiles"] = \
+                self.verify_compile_count()
+            self.plan_log[-1]["verify_compiles"] = \
+                self.metrics["verify_compiles"]
+        self._step_tail(plan, t_step)
+        return done, None
+
+    def _step_tail(self, plan: StepPlan, t_step: float) -> None:
+        """Per-step accounting that must run after the step's tokens
+        have landed (spec ratios read ``tokens_out``; sharing peaks
+        read post-release refcounts)."""
+        drafted = self.metrics["draft_tokens"]
+        self.metrics["accept_ratio"] = (
+            self.metrics["accepted_tokens"] / drafted if drafted
+            else 0.0)
+        self.metrics["steps_per_token"] = (
+            self.metrics["seq_steps"]
+            / max(1, self.metrics["tokens_out"]))
+        if plan.has_work() and self.straggler.record_slow(
+                0, self._now() - t_step):
+            self.metrics["slow_steps"] += 1
+        if self.paged:
+            # fork-sharing accounting: each lease beyond a block's
+            # first is a block NOT copied (shared prompt KV)
+            live = shared = 0
+            for rc in self.pager.refcount:
+                if rc > 0:
+                    live += 1
+                    shared += rc - 1
+            self.metrics["blocks_live_peak"] = max(
+                self.metrics["blocks_live_peak"], live)
+            self.metrics["blocks_saved_by_sharing_peak"] = max(
+                self.metrics["blocks_saved_by_sharing_peak"], shared)
 
     def cache_utilization(self) -> float:
         """Fraction of the KV pool in use (slots-occupied for dense)."""
@@ -567,6 +696,13 @@ class Engine:
         return len(self.scheduler.running) / self.max_slots
 
     def throughput_tok_s(self) -> float:
+        """DECODE-ONLY throughput: ``tokens_out / t_decode``, where
+        ``t_decode`` is wall time inside the batched decode step
+        (dispatch to token sync) and excludes prefill, scheduling, and
+        host bookkeeping.  This is the figure BENCH_engine.json records
+        as ``decode_tok_s`` and the CI gates compare; end-to-end
+        tokens-per-wall-second is always lower and must be computed by
+        the caller (the `[serve]` banner prints both, labeled)."""
         t = self.metrics["t_decode"]
         return self.metrics["tokens_out"] / t if t > 0 else 0.0
 
@@ -1011,7 +1147,21 @@ class Engine:
         sequence draws from its own stream regardless of who shares the
         batch — which is also what makes fault isolation bit-exact: a
         row leaving the batch (failed request) cannot change any
-        survivor's draws."""
+        survivor's draws.
+
+        Implemented as dispatch + complete so :meth:`step_async` can
+        return between the two with the device still computing; calling
+        them back to back (here) is the synchronous path and is
+        bit-identical — the split only moves WHERE the host blocks, not
+        what it computes."""
+        return self._decode_complete(self._decode_dispatch(slots))
+
+    def _decode_dispatch(self, slots: List[int]) -> _PendingDecode:
+        """Token-independent half of the decode step: build the padded
+        row inputs, dispatch the device decode and the per-row-keyed
+        sampling, and return WITHOUT forcing the results to host.
+        ``nxt``/``finite`` in the returned struct are device arrays
+        still being computed under JAX async dispatch."""
         failed: List[Request] = []
         if self.faults is not None:
             slots, failed = self._survive_faults(
@@ -1019,9 +1169,7 @@ class Engine:
                 uid_of=lambda s: self.scheduler.running[s].req.uid,
                 alive=lambda s: s in self.scheduler.running)
             if not slots:
-                self.cache["lens"] = jnp.asarray(
-                    self.scheduler.device_lens(), jnp.int32)
-                return failed
+                return _PendingDecode(slots=[], failed=failed)
         tokens = np.zeros((self.max_slots,), np.int32)
         temps = np.ones((self.max_slots,), np.float32)
         top_ps = np.ones((self.max_slots,), np.float32)
@@ -1046,17 +1194,33 @@ class Engine:
         if self.faults is not None:
             logits = self.faults.corrupt_logits(
                 SITE_DECODE, self._step, logits, row_uids)
-        finite = (np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        finite = (jnp.all(jnp.isfinite(logits), axis=-1)
                   if self.nan_guard else None)
-        nxt = np.asarray(sample_logits_per_row(
-            keys, logits, jnp.asarray(temps), jnp.asarray(top_ps)))
+        nxt = sample_logits_per_row(
+            keys, logits, jnp.asarray(temps), jnp.asarray(top_ps))
         self.metrics["decode_steps"] += 1
         self.metrics["seq_steps"] += len(slots)
-        self.metrics["t_decode"] += self._now() - t0
         kv_now = sum(self.scheduler.running[i].kv_len for i in slots
                      if i in self.scheduler.running)
         self._account_energy(float(len(slots)), float(kv_now),
                              float(kv_now))
+        return _PendingDecode(slots=slots, failed=failed, nxt=nxt,
+                              finite=finite, t0=t0)
+
+    def _decode_complete(self, p: _PendingDecode) -> List[Request]:
+        """Token-dependent half: block on the sampled tokens, append
+        them, register completed blocks, retire stops, resync lengths.
+        ``t_decode`` is charged dispatch→here, so in pipelined serving
+        it includes the host's overlap window — wall time the device
+        was busy either way."""
+        if not p.slots:
+            self.cache["lens"] = jnp.asarray(
+                self.scheduler.device_lens(), jnp.int32)
+            return p.failed
+        slots, failed = p.slots, p.failed
+        finite = np.asarray(p.finite) if p.finite is not None else None
+        nxt = np.asarray(p.nxt)
+        self.metrics["t_decode"] += self._now() - p.t0
 
         finished: List[Request] = []
         for i in slots:

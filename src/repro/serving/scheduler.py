@@ -300,6 +300,12 @@ class Scheduler:
 
     # -- public API ------------------------------------------------------
     def add(self, req: Any) -> None:
+        """Enqueue a request for admission.  Legal at ANY point between
+        engine steps — continuous-arrival serving calls this mid-flight
+        while earlier requests are still decoding; the new arrival is
+        considered at the next ``schedule()``'s admission pass.  FIFO by
+        arrival except that preempted sequences requeue at the front
+        (resume-before-admit keeps the starvation bound meaningful)."""
         if req.output is None:
             req.output = []
         # sibling 0's stream IS req.output, so singleton callers keep
@@ -312,6 +318,25 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
+
+    def queue_depth(self) -> int:
+        """Sequences admitted to the waiting queue but not yet running —
+        the open-loop front-end's backpressure signal.  Preempted
+        sequences waiting to resume count too: they hold no blocks
+        while queued, so they are demand just like fresh arrivals."""
+        return len(self.waiting)
+
+    def request(self, uid: int) -> Optional[Any]:
+        """Look up a live request by uid (waiting or running), or None
+        once it has finished/failed.  The async front-end holds the
+        returned object to stream ``output`` deltas mid-flight."""
+        for seq in self.waiting:
+            if seq.req.uid == uid:
+                return seq.req
+        for seq in self.running.values():
+            if seq.req.uid == uid:
+                return seq.req
+        return None
 
     def device_lens(self) -> np.ndarray:
         """Authoritative per-slot KV lengths (0 for free slots)."""

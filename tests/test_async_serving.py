@@ -1,0 +1,286 @@
+"""Continuous-arrival async serving: the pipelined step split
+(``step_async``/``finish_step``), the streaming front-end
+(serving/async_serving.py), and the open-loop driver.
+
+The load-bearing claims pinned here:
+
+  * mid-flight ``submit()`` — including from inside the overlap window
+    while the device step is in flight — produces streams bit-identical
+    to the closed ``run()`` path for the same arrival order, with zero
+    leaked blocks and no new prefill executables;
+  * streaming delivers every token exactly once, in order, per sibling,
+    at any ``stream_interval_steps``, via callbacks and the generator;
+  * latency accounting measures from TRUE arrival time and excludes
+    requests that never produced a first token (the
+    ``t_first_token == 0.0`` default would otherwise contribute a huge
+    negative sample — the serve.py TTFT bugfix's regression test);
+  * deadlines are charged from true arrival, so a request that queued
+    too long expires even if it was released to the engine "just now".
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.serving.async_serving import (AsyncServer, first_token_latencies,
+                                         latency_summary_ms,
+                                         negative_latency_samples,
+                                         poisson_arrivals, run_open_loop,
+                                         time_per_output_token)
+from repro.serving.engine import Engine
+from repro.serving.faults import ERR_DEADLINE, ERR_SHED, SimClock
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("llama2-110m")).with_(compute_dtype="float32")
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _mk_engine(model, params, **kw):
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("n_pages", 32)
+    kw.setdefault("prefill_chunk_tokens", 8)
+    return Engine(model, params, **kw)
+
+
+def _prompts(seed, n, lo=4, hi=12):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, 500, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _streams(req):
+    outs = req.outputs if req.outputs is not None else [req.output or []]
+    return tuple(tuple(o) for o in outs)
+
+
+class TestPipelinedStep:
+    def test_overlap_submit_bitexact_no_leaks_no_recompiles(
+            self, model_params):
+        """Requests submitted inside the dispatch→sync overlap window
+        serve bit-identically to the same arrival order submitted up
+        front and drained closed-loop."""
+        model, params = model_params
+        prompts = _prompts(3, 5)
+        kws = [dict(max_new_tokens=4 + i % 3, seed=50 + i,
+                    temperature=0.0 if i % 2 else 1.0)
+               for i in range(len(prompts))]
+
+        eng1 = _mk_engine(model, params)
+        for p, kw in zip(prompts, kws):
+            eng1.submit(p, **kw)
+        ref = {r.uid: _streams(r) for r in eng1.run()}
+        compiles_after_closed = eng1.prefill_compile_count()
+
+        eng2 = _mk_engine(model, params)
+        for p, kw in zip(prompts[:2], kws[:2]):
+            eng2.submit(p, **kw)
+        done, nxt = [], 2
+        while eng2.scheduler.has_work() or eng2._pending is not None:
+            out, pending = eng2.step_async()
+            if out:
+                done.extend(out)
+            if nxt < len(prompts):
+                # the device step (if any) is in flight right now
+                eng2.submit(prompts[nxt], **kws[nxt])
+                nxt += 1
+            done.extend(eng2.finish_step(pending))
+        assert nxt == len(prompts)
+        got = {r.uid: _streams(r) for r in done}
+        assert got == ref, "mid-flight submission changed a stream"
+        assert all(rc == 0 for rc in eng2.pager.refcount)
+        # continuous arrivals reuse the same pool-key executable: the
+        # closed pass already compiled it, the open pass adds none
+        assert eng2.prefill_compile_count() == compiles_after_closed
+
+    def test_step_guard_and_finish_idempotence(self, model_params):
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        assert eng.finish_step() == []            # nothing pending: no-op
+        eng.submit(_prompts(4, 1)[0], max_new_tokens=4, seed=1)
+        pending = None
+        while eng.scheduler.has_work():
+            out, pending = eng.step_async()
+            if pending is not None:
+                break
+        if pending is not None:
+            with pytest.raises(RuntimeError, match="finish_step"):
+                eng.step()
+            eng.finish_step(pending)
+        eng.run()
+
+    def test_rejected_drains_through_step(self, model_params):
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        uid = eng.submit(np.zeros(0, np.int32), max_new_tokens=4)
+        out = eng.step()
+        assert [r.uid for r in out] == [uid]
+        assert out[0].error is not None
+        assert eng.step() is None                 # idle now
+
+
+class TestStreaming:
+    @pytest.mark.parametrize("interval", [1, 3])
+    def test_callback_every_token_once_in_order(self, model_params,
+                                                interval):
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        server = AsyncServer(eng, stream_interval_steps=interval)
+        got = {}
+        flags = {}
+
+        def on_token(handle, sibling, tokens, done):
+            got.setdefault(handle.uid, {}).setdefault(sibling,
+                                                      []).extend(tokens)
+            if done:
+                flags[handle.uid] = True
+
+        handles = [server.submit(p, on_token=on_token, max_new_tokens=5,
+                                 seed=60 + i)
+                   for i, p in enumerate(_prompts(5, 3))]
+        while server.has_work():
+            server.step()
+        for h in handles:
+            assert h.done and flags.get(h.uid)
+            streams = _streams(h.req)
+            for s, stream in enumerate(streams):
+                assert tuple(got[h.uid].get(s, [])) == stream, \
+                    "callback deltas must reassemble the exact stream"
+
+    def test_fanout_siblings_stream_separately(self, model_params):
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        server = AsyncServer(eng)
+        h = server.submit(_prompts(6, 1)[0], max_new_tokens=4,
+                          n_samples=2, seed=7, temperature=1.0)
+        while server.has_work():
+            server.step()
+        assert h.req.outputs is not None and len(h.req.outputs) == 2
+        by_sib = {}
+        for s, t in h.buffer:
+            by_sib.setdefault(s, []).append(t)
+        for s, stream in enumerate(_streams(h.req)):
+            assert tuple(by_sib.get(s, [])) == stream
+
+    def test_generator_surface(self, model_params):
+        """The generator pumps the engine itself; other requests on the
+        same pump complete too."""
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        server = AsyncServer(eng)
+        prompts = _prompts(7, 2)
+        h0 = server.submit(prompts[0], max_new_tokens=5, seed=70)
+        h1 = server.submit(prompts[1], max_new_tokens=3, seed=71)
+        toks = [t for _, t in server.stream(h0)]
+        assert tuple(toks) == _streams(h0.req)[0]
+        while server.has_work():
+            server.step()
+        assert h1.done and h1.req.error is None
+
+
+class TestLatencyAccounting:
+    def test_ttft_filter_excludes_requests_without_first_token(
+            self, model_params):
+        """Regression for the serve.py TTFT bug: an errored/rejected
+        request keeps ``t_first_token == 0.0``; with a nonzero clock its
+        unfiltered 'latency' is hugely negative and corrupts every
+        percentile.  The shared helpers must exclude it."""
+        model, params = model_params
+        clock = SimClock(start=5.0)               # t_enqueue >= 5s
+        eng = _mk_engine(model, params, clock=clock)
+        server = AsyncServer(eng)
+        valid = [server.submit(p, max_new_tokens=4, seed=80 + i)
+                 for i, p in enumerate(_prompts(8, 3))]
+        invalid = server.submit(np.zeros(0, np.int32), max_new_tokens=4)
+        while server.has_work():
+            server.step()
+        reqs = [h.req for h in valid + [invalid]]
+        assert invalid.req.error is not None
+        assert invalid.req.t_first_token == 0.0
+        # the buggy unfiltered expression really would corrupt things:
+        raw = [r.t_first_token - r.t_enqueue for r in reqs]
+        assert min(raw) < -1.0
+        lat = first_token_latencies(reqs)
+        assert len(lat) == len(valid)
+        assert np.all(lat >= 0.0)
+        assert negative_latency_samples(reqs) == 0
+        summ = latency_summary_ms(lat)
+        assert all(v >= 0.0 for v in summ.values())
+        assert np.all(time_per_output_token(reqs) >= 0.0)
+
+    def test_deadline_charged_from_true_arrival(self, model_params):
+        """A request that queued past its deadline BEFORE release
+        expires immediately: the watchdog clock starts at true arrival
+        (t_enqueue), not at batch/release time."""
+        model, params = model_params
+        clock = SimClock(start=10.0)
+        eng = _mk_engine(model, params, clock=clock)
+        server = AsyncServer(eng)
+        stale = server.submit(_prompts(9, 1)[0], max_new_tokens=4,
+                              t_arrival=0.0, deadline_ms=1_000.0)
+        fresh = server.submit(_prompts(10, 1)[0], max_new_tokens=4,
+                              seed=90, deadline_ms=60_000.0)
+        while server.has_work():
+            server.step()
+        assert stale.req.error_kind == ERR_DEADLINE
+        assert fresh.req.error is None
+
+    def test_backpressure_shed_bounds_queue(self, model_params):
+        model, params = model_params
+        eng = _mk_engine(model, params)
+        server = AsyncServer(eng, max_queue_depth=2)
+        handles = [server.submit(p, max_new_tokens=3, seed=95 + i)
+                   for i, p in enumerate(_prompts(11, 6))]
+        shed = [h for h in handles if h.error_kind == ERR_SHED]
+        assert shed, "burst past the queue bound must shed"
+        assert all(h.done for h in shed)
+        while server.has_work():
+            server.step()
+        served = [h for h in handles if h not in shed]
+        assert all(h.req.error is None for h in served)
+        assert eng.metrics["shed_requests"] >= len(shed)
+
+
+class TestOpenLoopDriver:
+    def test_open_loop_bitexact_vs_closed_and_sane_report(
+            self, model_params):
+        """The acceptance bar: Poisson arrivals served open-loop stream
+        bit-identically to the closed-batch run of the same arrival
+        order, and the report's latency fields are sane (measured from
+        true arrival, no negative samples, nonzero goodput)."""
+        model, params = model_params
+        prompts = _prompts(12, 6)
+        kws = [dict(max_new_tokens=4, seed=100 + i,
+                    temperature=0.0 if i % 2 else 1.0)
+               for i in range(len(prompts))]
+
+        eng1 = _mk_engine(model, params)
+        for p, kw in zip(prompts, kws):
+            eng1.submit(p, **kw)
+        ref = [_streams(r) for r in
+               sorted(eng1.run(), key=lambda r: r.uid)]
+
+        # wall clock on purpose: a fast Poisson burst lands arrivals
+        # while earlier requests are mid-flight, and the streams must
+        # be bit-identical REGARDLESS of real release timing — that
+        # independence is the claim under test
+        eng2 = _mk_engine(model, params)
+        arrivals = poisson_arrivals(seed=12, n=len(prompts), rate_per_s=200.0)
+        workload = [(float(t), p, kw)
+                    for t, p, kw in zip(arrivals, prompts, kws)]
+        handles, report = run_open_loop(eng2, workload)
+        got = [_streams(h.req) for h in handles]
+        assert got == ref, "open-loop stream diverged from closed-loop"
+        assert report.completed_ok == len(prompts)
+        assert report.failed == 0
+        assert report.neg_latency_samples == 0
+        assert report.goodput_tok_s > 0.0
+        assert report.ttft_ms["p50"] >= 0.0
+        assert report.ttft_ms["p99"] >= report.ttft_ms["p50"]
+        assert all(rc == 0 for rc in eng2.pager.refcount)
