@@ -130,6 +130,17 @@ OL_LOAD_FACTOR = 0.8
 OL_SEED = 17
 OL_COMPILE_BOUND = 0         # continuous arrivals over the closed pass
 
+# multi-chip workload: the same mixed greedy/sampled traffic served
+# unsharded and over a tensor-parallel mesh (model axis = largest of
+# 1/2/4 that the local device count allows).  The CI multi-device lane
+# runs it under XLA_FLAGS=--xla_force_host_platform_device_count=4 and
+# gates on stream bit-exactness vs the unsharded engine, zero leaked
+# blocks at drain, a clean allocator audit, and the chunk step's
+# one-executable-per-(pool key, mesh shape) compile bound
+MC_PROMPT_LENS = (5, 19, 11, 32, 8, 23)
+MC_MAX_NEW = 8
+MC_COMPILE_BOUND = 1         # executables per (pool key, mesh shape)
+
 
 def _build_model():
     import jax
@@ -850,6 +861,96 @@ def run_open_loop_serving(model, params, quiet: bool = False) -> dict:
     return result
 
 
+def run_multi_chip(model, params, quiet: bool = False) -> dict:
+    """Serve MC_PROMPT_LENS (alternating greedy / seeded sampled) twice
+    — unsharded, then over a tensor-parallel mesh whose model axis is
+    the largest of 1/2/4 the local device count allows — and report
+    what the sharded engine must hold:
+
+      * ``streams_bitexact`` — every request's token stream from the
+        mesh engine matches the unsharded engine bit for bit (the
+        storage-sharded / compute-replicated contract: all collectives
+        are gathers, so no float reduction is reassociated across
+        devices; raises on violation),
+      * ``leaked_blocks`` / ``audit_clean`` — the host-side allocator is
+        device-count-agnostic: drain leaves zero leases and a clean
+        audit however many devices sit under the pool,
+      * ``prefill_compiles`` — the chunk step stays at
+        MC_COMPILE_BOUND executables for this (pool key, mesh shape).
+
+    On one device the mesh degenerates to model=1 (placement through
+    the same device_put/constraint path, no sharding) — still a real
+    gate on the mesh code path; the CI lane forces 4 host devices so
+    model=4 runs everywhere."""
+    import jax
+
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving.engine import Engine
+
+    n_dev = jax.device_count()
+    msize = max(n for n in (1, 2, 4) if n <= n_dev)
+    mesh = make_serve_mesh(msize)
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(4, 500, size=n).astype(np.int32)
+               for n in MC_PROMPT_LENS]
+
+    def serve(mesh_):
+        eng = Engine(model, params, max_slots=4, max_seq=96, page_size=8,
+                     prefill_chunk_tokens=24, mesh=mesh_)
+        compiles0 = eng.prefill_compile_count()
+        uids = [eng.submit(p, max_new_tokens=MC_MAX_NEW,
+                           temperature=0.0 if i % 2 == 0 else 1.0,
+                           seed=500 + i)
+                for i, p in enumerate(prompts)]
+        done = {r.uid: r for r in eng.run()}
+        assert all(done[u].error is None for u in uids), \
+            [done[u].error for u in uids if done[u].error is not None]
+        streams = [tuple(tuple(o) for o in done[u].outputs) for u in uids]
+        return eng, streams, eng.prefill_compile_count() - compiles0
+
+    eng0, ref, _ = serve(None)
+    eng, got, compiles = serve(mesh)
+    if got != ref:
+        bad = [i for i, (a, b) in enumerate(zip(got, ref)) if a != b]
+        raise AssertionError(
+            f"mesh={msize} streams diverged from unsharded on requests "
+            f"{bad}")
+    leaked = (eng.pager.cfg.n_blocks - eng.pager.n_free()
+              + sum(1 for rc in eng.pager.refcount if rc))
+    audit_clean = eng.pager.audit(repair=False).clean
+
+    result = {
+        "requests": len(prompts),
+        "prompt_lens": list(MC_PROMPT_LENS),
+        "max_new_tokens": MC_MAX_NEW,
+        "n_devices": n_dev,
+        "mesh_model": msize,
+        "streams_bitexact": True,
+        "leaked_blocks": int(leaked),
+        "audit_clean": bool(audit_clean),
+        "prefill_compiles": compiles,
+        "compile_bound": MC_COMPILE_BOUND,
+        "decode_tok_s": eng.throughput_tok_s(),
+        "decode_tok_s_unsharded": eng0.throughput_tok_s(),
+        "tokens_out": eng.metrics["tokens_out"],
+        "preemptions": eng.metrics["preemptions"],
+    }
+    if not quiet:
+        print(f"enginebench/multi_chip_bitexact,1,bool"
+              f" (mesh model={msize} over {n_dev} devices vs unsharded,"
+              f" {result['tokens_out']} tokens)")
+        print(f"enginebench/multi_chip_leaked_blocks,"
+              f"{result['leaked_blocks']},blocks"
+              f" (audit clean {audit_clean})")
+        print(f"enginebench/multi_chip_compiles,{compiles},executables"
+              f" (bound {MC_COMPILE_BOUND} per pool key per mesh shape)")
+        print(f"enginebench/multi_chip_decode_tok_s,"
+              f"{result['decode_tok_s']:.1f},tok/s"
+              f" (unsharded {result['decode_tok_s_unsharded']:.1f};"
+              f" CPU smoke signal, not a TPU figure)")
+    return result
+
+
 def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
         max_new_tokens: int = 16) -> dict:
     from repro.serving.async_serving import first_token_latencies
@@ -905,6 +1006,7 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
                                                     quiet=quiet)
     result["spec_decode"] = run_spec_decode(model, params, quiet=quiet)
     result["open_loop"] = run_open_loop_serving(model, params, quiet=quiet)
+    result["multi_chip"] = run_multi_chip(model, params, quiet=quiet)
     with open(json_path, "w") as fh:
         json.dump(result, fh, indent=2)
     if not quiet:
@@ -922,5 +1024,31 @@ def run(quiet: bool = False, json_path: str = "BENCH_engine.json",
     return result
 
 
+WORKLOADS = {
+    "shared_prefix": run_shared_prefix,
+    "parallel_sampling": run_parallel_sampling,
+    "shape_churn": run_shape_churn,
+    "long_context": run_long_context,
+    "fault_tolerance": run_fault_tolerance,
+    "spec_decode": run_spec_decode,
+    "open_loop": run_open_loop_serving,
+    "multi_chip": run_multi_chip,
+}
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", choices=[""] + sorted(WORKLOADS),
+                    help="run a single workload (the CI multi-device "
+                         "lane re-runs multi_chip under forced host "
+                         "devices without repeating the full suite)")
+    ap.add_argument("--json", default="BENCH_engine.json")
+    args = ap.parse_args()
+    if args.only:
+        mdl, prms = _build_model()
+        out = {args.only: WORKLOADS[args.only](mdl, prms)}
+        with open(args.json, "w") as fh:
+            json.dump(out, fh, indent=2)
+    else:
+        run(json_path=args.json)

@@ -217,4 +217,79 @@ if ol["prefill_compiles"] > ol["compile_bound"]:
     sys.exit(f"FAIL: continuous arrivals compiled "
              f"{ol['prefill_compiles']} extra prefill executables "
              f"(bound {ol['compile_bound']}: reuse the closed pass's)")
+mc = bench["multi_chip"]
+print(f"  multi chip: mesh model={mc['mesh_model']} over "
+      f"{mc['n_devices']} device(s) "
+      f"bitexact={mc['streams_bitexact']} "
+      f"leaked={mc['leaked_blocks']} audit_clean={mc['audit_clean']} "
+      f"compiles={mc['prefill_compiles']} (bound {mc['compile_bound']})")
+# Multi-chip tripwires (this pass runs on however many devices the CI
+# host exposes — usually one, mesh model=1 through the same placement
+# path; the dedicated multi-device lane below re-runs it at model=4):
+# (a) mesh streams must match unsharded serving bit for bit (the bench
+# itself raises on divergence, so this guards the flag plumbing);
+# (b) the host-side allocator must be device-count-agnostic — drain
+# leaves zero leases and a clean audit; (c) the chunk step stays at one
+# executable per (pool key, mesh shape).
+if not mc["streams_bitexact"]:
+    sys.exit("FAIL: mesh-sharded streams diverged from unsharded serving")
+if mc["leaked_blocks"] != 0 or not mc["audit_clean"]:
+    sys.exit(f"FAIL: sharded drain leaked {mc['leaked_blocks']} blocks "
+             f"(audit clean: {mc['audit_clean']})")
+if mc["prefill_compiles"] > mc["compile_bound"]:
+    sys.exit(f"FAIL: sharded chunk step compiled "
+             f"{mc['prefill_compiles']}x (documented bound: "
+             f"{mc['compile_bound']} per (pool key, mesh shape))")
+EOF
+
+# ---- multi-device lane -------------------------------------------------
+# Re-run the serving tiers under 4 forced host devices (the XLA_FLAGS
+# must be set before the first jax import, hence fresh processes): the
+# tensor-parallel tests stop self-skipping — mesh sizes 2 and 4 execute
+# for real — and the multi_chip bench serves over a model=4 mesh.
+echo "=== multi-device lane (XLA_FLAGS forces 4 host devices) ==="
+MD_FLAGS="--xla_force_host_platform_device_count=4"
+
+# test_analysis's SPMD-module test must RUN here, not skip: grep the
+# pytest summary for the pass (a skip also exits 0, so the exit code
+# alone cannot gate the un-skip requirement).
+XLA_FLAGS="$MD_FLAGS ${XLA_FLAGS:-}" python -m pytest -q \
+    "tests/test_analysis.py::TestHloCollectives::test_real_lowered_module" \
+    | tee "$ARTIFACTS_DIR/lane_real_lowered.txt"
+grep -q "1 passed" "$ARTIFACTS_DIR/lane_real_lowered.txt" || {
+    echo "FAIL: test_real_lowered_module still skips under the" \
+         "multi-device lane"; exit 1; }
+
+XLA_FLAGS="$MD_FLAGS ${XLA_FLAGS:-}" python -m pytest -q \
+    tests/test_sharded_serving.py tests/test_engine_properties.py \
+    tests/test_compile_stability.py tests/test_analysis.py
+
+XLA_FLAGS="$MD_FLAGS ${XLA_FLAGS:-}" python - <<'EOF'
+import json
+import os
+import sys
+sys.path.insert(0, ".")
+import jax
+assert jax.device_count() >= 4, \
+    f"lane misconfigured: {jax.device_count()} devices"
+from benchmarks import engine_bench
+art = os.environ.get("ARTIFACTS_DIR", "artifacts")
+mc = engine_bench.run_multi_chip(*engine_bench._build_model())
+with open(os.path.join(art, "BENCH_multi_chip.json"), "w") as fh:
+    json.dump(mc, fh, indent=2)
+print("CI multi-device lane summary:")
+print(f"  mesh model={mc['mesh_model']} over {mc['n_devices']} devices "
+      f"bitexact={mc['streams_bitexact']} leaked={mc['leaked_blocks']} "
+      f"audit_clean={mc['audit_clean']} "
+      f"compiles={mc['prefill_compiles']} (bound {mc['compile_bound']})")
+if mc["mesh_model"] != 4:
+    sys.exit(f"FAIL: lane served at mesh model={mc['mesh_model']}, not 4")
+if not mc["streams_bitexact"]:
+    sys.exit("FAIL: model=4 streams diverged from unsharded serving")
+if mc["leaked_blocks"] != 0 or not mc["audit_clean"]:
+    sys.exit(f"FAIL: model=4 drain leaked {mc['leaked_blocks']} blocks "
+             f"(audit clean: {mc['audit_clean']})")
+if mc["prefill_compiles"] > mc["compile_bound"]:
+    sys.exit(f"FAIL: model=4 chunk step compiled "
+             f"{mc['prefill_compiles']}x (bound {mc['compile_bound']})")
 EOF

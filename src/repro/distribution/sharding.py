@@ -129,6 +129,22 @@ def _rule(path: str, rank: int, cfg: ModelConfig, model_size: int,
             return _pad(("data", None, "model"), rank)
         return _pad(("model", None, None), rank)
 
+    # --- fused decode GEMV operands (transformer.fuse_decode_weights) ---
+    # wqkv ((H+2KVH)*hd, D), w13 (2*d_ff, D), wo_f (D, H*hd).  Serving
+    # stores these sharded for per-device weight-memory scaling; the
+    # serve-mode attention choice follows serve_attn_shard like the
+    # unfused projections (din = contraction sharded).
+    if re.search(r"/attn/wqkv$", path):
+        if mode == "serve" and cfg.serve_attn_shard == "din":
+            return _pad((None, "model"), rank)
+        return _pad(("model", None), rank)
+    if re.search(r"/attn/wo_f$", path):
+        if mode == "serve" and cfg.serve_attn_shard == "din":
+            return _pad((None, "model"), rank)
+        return _pad(("model", None), rank)
+    if re.search(r"/mlp/w13$", path):
+        return _pad(("model", None), rank)
+
     # --- dense MLP ---
     if re.search(r"/mlp/w[13]$", path):
         return _pad(("model", None), rank)
@@ -161,18 +177,28 @@ def _rule(path: str, rank: int, cfg: ModelConfig, model_size: int,
 def sanitize(spec: P, shape: tuple, mesh) -> P:
     """Null out any spec entry whose dim doesn't divide the axis size —
     explicit NamedShardings must divide exactly (no GSPMD padding at the
-    jit boundary)."""
-    parts = list(spec) + [None] * (len(shape) - len(spec))
+    jit boundary).
+
+    Degrades, never raises: an over-long spec is truncated to the
+    array's rank and axis names the mesh doesn't carry fall back to
+    replication.  Serving calls this mid-admission (paged-pool layouts
+    with odd KV-head counts or tiny block sizes), where raising would
+    turn a spec mismatch into a failed request."""
+    parts = list(spec)[:len(shape)] + \
+        [None] * max(0, len(shape) - len(spec))
     out = []
     for dim, axis in zip(shape, parts):
         if axis is None:
             out.append(None)
             continue
         axes = axis if isinstance(axis, tuple) else (axis,)
+        if any(a not in mesh.shape for a in axes):
+            out.append(None)
+            continue
         size = 1
         for a in axes:
             size *= mesh.shape[a]
-        out.append(axis if dim % size == 0 else None)
+        out.append(axis if size > 0 and dim % size == 0 else None)
     return P(*out)
 
 
@@ -254,6 +280,59 @@ def data_specs(cfg: ModelConfig, batch: Any, mesh, mode: str = "train"
     return jax.tree_util.tree_map_with_path(visit, batch)
 
 
+def pool_model_axis(cfg: ModelConfig, mesh) -> Any:
+    """The mesh axis the paged KV pool shards over, or None.
+
+    The pool shards its KV-heads dim — per-head attention math is local
+    (heads only mix at the wo contraction), so a KVH split keeps every
+    floating-point reduction on one device and the engine's bitwise
+    stream contract intact.  Degrades to replication when KVH doesn't
+    divide the model axis (odd head counts)."""
+    msize = mesh.shape.get("model", 1)
+    if msize <= 1:
+        # sharding over a size-1 axis is replication; GSPMD normalizes
+        # it away on jit outputs, so naming the axis here would make the
+        # initial device_put placement miss the steady-state executable
+        return None
+    if cfg.n_kv_heads > 0 and cfg.n_kv_heads % msize == 0:
+        return "model"
+    return None
+
+
+def _canon(spec: P) -> P:
+    """Drop trailing Nones.  PartitionSpec compares as a tuple, and
+    jit-normalized output shardings come back without trailing Nones — an
+    explicit-trailing-None device_put spec would differ from the first
+    step's output sharding in the donated-cache jit key and buy a
+    spurious second executable per mesh."""
+    parts = list(spec)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def paged_cache_specs(cfg: ModelConfig, cache: Any, mesh) -> Any:
+    """Paged-pool sharding: KV pool (L, N, bs, KVH, hd) splits KVH over
+    `model` (see ``pool_model_axis``); int8 scale pools (L, N, bs, KVH)
+    follow; page_table / lens are host-authored control state and stay
+    replicated.  Specs are canonical (no trailing Nones) so the engine's
+    initial device_put placement hits the same executable as the steady
+    state where the donated cache cycles through jit outputs."""
+    kvh_ax = pool_model_axis(cfg, mesh)
+
+    def visit(path, leaf):
+        p = _path_str(path)
+        if p.endswith("/k") or p.endswith("/v"):
+            return _canon(sanitize(P(None, None, None, kvh_ax, None),
+                                   leaf.shape, mesh))
+        if p.endswith("/ks") or p.endswith("/vs"):
+            return _canon(sanitize(P(None, None, None, kvh_ax),
+                                   leaf.shape, mesh))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
 def cache_specs(cfg: ModelConfig, cache: Any, mesh) -> Any:
     """Decode-state sharding.
 
@@ -262,6 +341,9 @@ def cache_specs(cfg: ModelConfig, cache: Any, mesh) -> Any:
     on `model`.  Conv ring buffers: channels on `model` for the x buffer
     (path …/conv/0), replicated for tiny B/C buffers.
     """
+    if isinstance(cache, dict) and "page_table" in cache:
+        return paged_cache_specs(cfg, cache, mesh)
+
     dp = dp_axes(mesh)
     dsz = _dp_size(mesh)
     msize = mesh.shape["model"]

@@ -36,6 +36,29 @@ def make_host_mesh():
     return _mk((1, n), ("data", "model"))
 
 
+def make_serve_mesh(model_size: int | None = None):
+    """Serving mesh: (data=1, model=n) over the first n local devices.
+
+    Unlike ``make_host_mesh`` this takes an explicit model-axis size so a
+    4-device host can also build 1- and 2-wide meshes (the sharded-serving
+    test tier compares them).  jax.make_mesh always consumes all devices,
+    so build the Mesh over an explicit device subset."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if model_size is None else int(model_size)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"mesh model_size={n} needs 1..{len(devs)} devices")
+    arr = np.asarray(devs[:n]).reshape(1, n)
+    axes = ("data", "model")
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.sharding.Mesh(
+            arr, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.sharding.Mesh(arr, axes)
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes that carry the batch dim: everything except 'model'."""
     return tuple(a for a in mesh.axis_names if a != "model")

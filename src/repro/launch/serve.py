@@ -79,7 +79,7 @@ def run(arch: str = "llama2-110m", use_reduced: bool = True,
         spec_tokens: int = 0, draft: str = "ngram",
         open_loop: bool = False, rate: float = 0.0,
         load_factor: float = 0.85, stream: bool = False,
-        stream_interval: int = 1):
+        stream_interval: int = 1, mesh_size: int = 0):
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduced(cfg)
@@ -87,6 +87,14 @@ def run(arch: str = "llama2-110m", use_reduced: bool = True,
         cfg = cfg.with_(kv_cache_dtype="int8")
     model = build_model(cfg)
     params = _load_params(model, cfg, ckpt_dir, seed)
+
+    mesh = None
+    if mesh_size > 0:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(mesh_size)
+        print(f"[serve] tensor-parallel mesh: model={mesh_size} "
+              f"({len(mesh.devices.flat)} devices; KV pool sharded on "
+              f"KV heads, streams bit-identical to unsharded)")
 
     if not no_quant:
         t0 = time.perf_counter()
@@ -97,7 +105,7 @@ def run(arch: str = "llama2-110m", use_reduced: bool = True,
     def make_engine():
         return Engine(model, params, max_slots=slots, max_seq=max_seq,
                       seed=seed, spec_tokens=spec_tokens,
-                      draft_proposer=draft)
+                      draft_proposer=draft, mesh=mesh)
 
     rng = np.random.default_rng(seed)
     prompts = _make_prompts(rng, cfg, requests)
@@ -223,6 +231,11 @@ def main():
                     help="print tokens as they stream back per step")
     ap.add_argument("--stream-interval", type=int, default=1,
                     help="flush streamed tokens every N engine steps")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="tensor-parallel mesh size over the model axis "
+                         "(0 = single-device serving; needs that many "
+                         "devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.set_defaults(reduced=True)
     args = ap.parse_args()
     run(args.arch, args.reduced, args.requests, args.bits, args.kv_int8,
@@ -230,7 +243,7 @@ def main():
         no_quant=args.no_quant, spec_tokens=args.spec_tokens,
         draft=args.draft, open_loop=args.open_loop, rate=args.rate,
         load_factor=args.load_factor, stream=args.stream,
-        stream_interval=args.stream_interval)
+        stream_interval=args.stream_interval, mesh_size=args.mesh)
 
 
 if __name__ == "__main__":

@@ -43,13 +43,15 @@ class Model:
     prefill_chunk_batch: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
     # shape-stability probe: distinct XLA compiles of the chunk step so
     # far (transformer.prefill_chunk_compiles); None when unpaged.
-    prefill_compile_count: Optional[Callable[[], int]] = None
+    # Accepts mesh= — each mesh owns its own jit cache, so the bound is
+    # one executable per (pool key, mesh shape).
+    prefill_compile_count: Optional[Callable[..., int]] = None
     # speculative verify: the all-positions-logits twin of
     # prefill_chunk_batch — verify_chunk_batch(params, tokens (B, c),
     # cache, slots, pos_offsets, chunk_lens=...) -> ((B, c, V) logits,
     # cache) — with its own compile probe; None when unpaged.
     verify_chunk_batch: Optional[Callable[..., Tuple[jax.Array, Any]]] = None
-    verify_compile_count: Optional[Callable[[], int]] = None
+    verify_compile_count: Optional[Callable[..., int]] = None
 
     def quantize(self, params, policy: Optional[QuantPolicy] = None,
                  fuse_decode: bool = True):
@@ -82,15 +84,17 @@ def build_model(cfg: ModelConfig) -> Model:
         chunk = lambda p, t, c, slot, off: transformer.prefill_chunk(
             p, cfg, t, c, slot, off)
         chunk_batch = lambda p, t, c, slots, offs, page_table=None, \
-            chunk_lens=None: transformer.prefill_chunk_batch(
+            chunk_lens=None, mesh=None: transformer.prefill_chunk_batch(
                 p, cfg, t, c, slots, offs, page_table=page_table,
-                chunk_lens=chunk_lens)
-        compiles = lambda: transformer.prefill_chunk_compiles(cfg)
+                chunk_lens=chunk_lens, mesh=mesh)
+        compiles = lambda mesh=None: transformer.prefill_chunk_compiles(
+            cfg, mesh=mesh)
         verify_batch = lambda p, t, c, slots, offs, page_table=None, \
-            chunk_lens=None: transformer.verify_chunk_batch(
+            chunk_lens=None, mesh=None: transformer.verify_chunk_batch(
                 p, cfg, t, c, slots, offs, page_table=page_table,
-                chunk_lens=chunk_lens)
-        verify_compiles = lambda: transformer.verify_chunk_compiles(cfg)
+                chunk_lens=chunk_lens, mesh=mesh)
+        verify_compiles = lambda mesh=None: transformer.verify_chunk_compiles(
+            cfg, mesh=mesh)
     return Model(
         cfg=cfg,
         init=lambda key: transformer.init_params(cfg, key),

@@ -619,8 +619,52 @@ def init_paged_cache(cfg: ModelConfig, batch: int, *, block_size: int = 64,
             "attn": attn}
 
 
+def _serve_mesh_helpers(cfg: ModelConfig, mesh):
+    """with_sharding_constraint helpers for the storage-sharded /
+    compute-replicated tensor-parallel serving scheme (mesh=None ->
+    identity fns, zero cost on the single-device path).
+
+    The scheme: the paged KV pool shards its KV-heads dim over `model`
+    (per-head attention math is local — heads only mix at the wo
+    contraction), weights are *stored* sharded (serve-mode param specs)
+    but constrained replicated at use, and the attention output is
+    constrained replicated before the wo contraction.  Every collective
+    this induces is an all-gather — pure data movement, never
+    arithmetic — so sharded streams stay bit-identical to unsharded
+    ones (the head_dim contraction itself is never split, keeping every
+    floating-point reduction in single-device summation order).
+
+    Returns ``(crep, cpool)``: ``crep(tree)`` constrains every array
+    leaf replicated; ``cpool(attn, lead)`` pins pool buffers' KV-heads
+    dim to `model`, where ``lead`` counts leading unsharded dims (3 for
+    the stacked (L, NB, BS, KVH, hd) pool, 2 for a per-layer slice
+    inside the scan)."""
+    if mesh is None:
+        return (lambda t: t), (lambda attn, lead=3: attn)
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.distribution.sharding import pool_model_axis
+    rep = NamedSharding(mesh, PartitionSpec())
+    kvh_ax = pool_model_axis(cfg, mesh)
+
+    def crep(t):
+        return jax.tree_util.tree_map(
+            lambda a: lax.with_sharding_constraint(a, rep), t)
+
+    def cpool(attn, lead=3):
+        out = {}
+        for kk, buf in attn.items():
+            pad = [None] * lead
+            spec = (PartitionSpec(*pad, kvh_ax, None) if kk in ("k", "v")
+                    else PartitionSpec(*pad, kvh_ax))
+            out[kk] = lax.with_sharding_constraint(
+                buf, NamedSharding(mesh, spec))
+        return out
+
+    return crep, cpool
+
+
 def _attn_decode_layer_paged(p, x, cfg: ModelConfig, lcache, pt, pos,
-                             rope_cs):
+                             rope_cs, crep=None, cpool=None):
     """One decode layer against the block pool.
 
     lcache: {"k"/"v": (NB, BS, KVH, hd), ["ks"/"vs": (NB, BS, KVH)]};
@@ -658,31 +702,54 @@ def _attn_decode_layer_paged(p, x, cfg: ModelConfig, lcache, pt, pos,
         lcache["v"] = lcache["v"].at[safe, blk_off].set(
             v.astype(lcache["v"].dtype), mode="drop")
 
+    if cpool is not None:
+        lcache = cpool(lcache, 2)
     acfg = L.AttnConfig(cfg.n_heads, cfg.n_kv_heads, hd)
     out = L.paged_attention_decode(
         q * (hd ** -0.5), lcache["k"], lcache["v"], pt, pos + 1, acfg,
         lcache.get("ks"), lcache.get("vs"))
+    if crep is not None:
+        # heads mix in the wo contraction: gather them whole first so the
+        # reduction keeps single-device summation order (bitwise contract)
+        out = crep(out)
     x = x + _decode_out_proj(p["attn"], out, x.dtype)
     x = x + _mlp_or_moe(p, x[:, None, :], cfg, decode=True)[:, 0]
     return x, lcache
 
 
 def _decode_step_paged(params: Params, cfg: ModelConfig, cache: Cache,
-                       tokens: jax.Array, positions) -> Tuple[jax.Array, Cache]:
+                       tokens: jax.Array, positions, mesh=None
+                       ) -> Tuple[jax.Array, Cache]:
     b = tokens.shape[0]
+    crep, cpool = _serve_mesh_helpers(cfg, mesh)
+    if mesh is not None:
+        params = crep(params)
+        tokens = crep(tokens)
+        cache = dict(cache)
+        cache["lens"] = crep(cache["lens"])
+        cache["page_table"] = crep(cache["page_table"])
+        cache["attn"] = cpool(cache["attn"], 3)
     pos = cache["lens"] if positions is None else positions
+    if mesh is not None and positions is not None:
+        pos = crep(pos)
     x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
     rp = pos if cfg.rope_type != "mrope" else jnp.broadcast_to(pos, (3, b))
     rope_cs = _rope_cos_sin(cfg, rp)
     pt = cache["page_table"]
+    lcrep = crep if mesh is not None else None
+    lcpool = cpool if mesh is not None else None
 
     def body(h, inp):
         lp, lc = inp
-        return _attn_decode_layer_paged(lp, h, cfg, lc, pt, pos, rope_cs)
+        return _attn_decode_layer_paged(lp, h, cfg, lc, pt, pos, rope_cs,
+                                        crep=lcrep, cpool=lcpool)
 
     x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
     x = L.apply_norm(x, params["final_norm"], cfg.norm_type, cfg.eps)
     logits = L.lm_head(_head_weight(params, cfg), x)
+    if mesh is not None:
+        logits = crep(logits)
+        new_attn = cpool(new_attn, 3)
     new_cache = dict(cache)
     new_cache["attn"] = new_attn
     # a slot with no first block is released/empty: pin its length at 0 so
@@ -700,14 +767,18 @@ def _ssm_decode_layer(p, x, cfg: ModelConfig, conv_state, ssm_state):
 
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
-                tokens: jax.Array, positions: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, Cache]:
+                tokens: jax.Array, positions: Optional[jax.Array] = None,
+                mesh=None) -> Tuple[jax.Array, Cache]:
     """tokens (B,) int32 -> (logits (B, V) f32, updated cache).
 
     A cache carrying a ``page_table`` (init_paged_cache) routes through the
-    paged decode path; the dense per-slot reservation is the default."""
+    paged decode path; the dense per-slot reservation is the default.
+    ``mesh`` (paged path only) applies the storage-sharded /
+    compute-replicated serving constraints — see
+    :func:`_serve_mesh_helpers`; dense decode ignores it."""
     if "page_table" in cache:
-        return _decode_step_paged(params, cfg, cache, tokens, positions)
+        return _decode_step_paged(params, cfg, cache, tokens, positions,
+                                  mesh=mesh)
     b = tokens.shape[0]
     pos = cache["lens"] if positions is None else positions  # (B,) int32
     x = L.embed_lookup(params["embed"], tokens).astype(_cdt(cfg))
@@ -891,7 +962,8 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
                         tokens_chunks: jax.Array, cache: Cache,
                         slots, pos_offsets,
                         page_table=None,
-                        chunk_lens=None) -> Tuple[jax.Array, Cache]:
+                        chunk_lens=None, mesh=None
+                        ) -> Tuple[jax.Array, Cache]:
     """Prefill one prompt chunk for up to B sequences in ONE device call —
     **shape-stable**: rows may carry *different* chunk lengths and
     position offsets, so the engine batches every chunk of a step (and
@@ -934,7 +1006,7 @@ def prefill_chunk_batch(params: Params, cfg: ModelConfig,
     """
     args = _chunk_call_args(tokens_chunks, cache, slots, pos_offsets,
                             page_table, chunk_lens)
-    return _prefill_chunk_fn(cfg, prefill_fused_mode())(
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(), mesh=mesh)(
         params, cache, *args)
 
 
@@ -942,7 +1014,8 @@ def verify_chunk_batch(params: Params, cfg: ModelConfig,
                        tokens_chunks: jax.Array, cache: Cache,
                        slots, pos_offsets,
                        page_table=None,
-                       chunk_lens=None) -> Tuple[jax.Array, Cache]:
+                       chunk_lens=None, mesh=None
+                       ) -> Tuple[jax.Array, Cache]:
     """Multi-token speculative *verify* step: exactly
     :func:`prefill_chunk_batch` — same traced addressing, same fused /
     oracle prefix read, same KV scatter — but returning logits for **all**
@@ -963,7 +1036,7 @@ def verify_chunk_batch(params: Params, cfg: ModelConfig,
     """
     args = _chunk_call_args(tokens_chunks, cache, slots, pos_offsets,
                             page_table, chunk_lens)
-    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True)(
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True, mesh=mesh)(
         params, cache, *args)
 
 
@@ -1049,7 +1122,7 @@ def prefill_fused_mode() -> str:
     return "kernel" if jax.default_backend() == "tpu" else "oracle"
 
 
-def prefill_chunk_compiles(cfg: ModelConfig) -> int:
+def prefill_chunk_compiles(cfg: ModelConfig, mesh=None) -> int:
     """How many distinct XLA executables back the chunked-prefill step
     for ``cfg`` so far in this process — the shape-stability probe.
 
@@ -1057,21 +1130,28 @@ def prefill_chunk_compiles(cfg: ModelConfig) -> int:
     distinct padded extent + pool shape, i.e. per *pool key*).  The
     engine snapshots it into ``metrics["prefill_compiles"]`` /
     ``plan_log``; tests and the shape-churn benchmark assert it stays at
-    one per pool key while traffic churns chunk lengths and offsets."""
-    return _prefill_chunk_fn(cfg, prefill_fused_mode())._cache_size()
+    one per pool key while traffic churns chunk lengths and offsets.
+
+    ``mesh`` selects that mesh's own jitted entry — the contract under
+    tensor parallelism is one executable per (pool key, mesh shape), and
+    because each mesh owns a separate jit cache, churning one mesh can
+    never recompile another's executables."""
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(),
+                             mesh=mesh)._cache_size()
 
 
-def verify_chunk_compiles(cfg: ModelConfig) -> int:
+def verify_chunk_compiles(cfg: ModelConfig, mesh=None) -> int:
     """Same probe as :func:`prefill_chunk_compiles` for the verify entry
     (the ``all_logits=True`` twin of the chunk step).  The engine pads
     every verify call to one fixed ``(max_slots, spec_tokens + 1)``
     extent, so this too must stay at one executable per pool key."""
-    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True)._cache_size()
+    return _prefill_chunk_fn(cfg, prefill_fused_mode(), True,
+                             mesh=mesh)._cache_size()
 
 
 @functools.lru_cache(maxsize=None)
 def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
-                      all_logits: bool = False):
+                      all_logits: bool = False, mesh=None):
     """Build (once per config + prefix-path mode) the jitted,
     cache-donating chunk step.
 
@@ -1090,7 +1170,13 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
     body, but the head projects every chunk position — ``(B, c, V)`` —
     instead of gathering each row's last valid position first.  It lives
     under its own lru/jit entry so verify's narrow padded extent never
-    shares (or churns) the prefill executable."""
+    shares (or churns) the prefill executable.
+
+    ``mesh`` applies the storage-sharded / compute-replicated serving
+    constraints (:func:`_serve_mesh_helpers`) and — being part of the
+    lru key — gives every mesh its own jitted entry, so the compile
+    contract is one executable per (pool key, mesh shape) and meshes
+    never invalidate each other."""
     hd = cfg.hd()
     kvh = cfg.n_kv_heads
     int8 = _kv_int8(cfg)
@@ -1099,10 +1185,19 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
         from repro.kernels import ops as KO
     acfg = L.AttnConfig(cfg.n_heads, kvh, hd, causal=True,
                         q_chunk=cfg.q_chunk)
+    crep, cpool = _serve_mesh_helpers(cfg, mesh)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def run(params, cache, toks, chunk_blk, chunk_off, pt_rows, slots,
             offs, lens):
+        if mesh is not None:
+            params = crep(params)
+            toks, chunk_blk, chunk_off, pt_rows, slots, offs, lens = crep(
+                (toks, chunk_blk, chunk_off, pt_rows, slots, offs, lens))
+            cache = dict(cache)
+            cache["lens"] = crep(cache["lens"])
+            cache["page_table"] = crep(cache["page_table"])
+            cache["attn"] = cpool(cache["attn"], 3)
         b, c = toks.shape
         bs = cache["attn"]["k"].shape[2]
         mb = pt_rows.shape[1]
@@ -1135,11 +1230,14 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
             if fused:
                 # prefix read through the page table inside the kernel's
                 # index_map: O(offs) live tiles fetched, dead tiles
-                # skipped, int8 dequantized in-kernel
+                # skipped, int8 dequantized in-kernel.  Under a mesh the
+                # pool is gathered whole first — the Pallas kernel
+                # addresses the full KVH extent, not a shard.
+                lck = crep(lc) if mesh is not None else lc
                 pfx_state = KO.paged_prefill_attention(
-                    q * (hd ** -0.5), lc["k"], lc["v"], pt_rows, offs,
-                    lens, lc["ks"] if int8 else None,
-                    lc["vs"] if int8 else None,
+                    q * (hd ** -0.5), lck["k"], lck["v"], pt_rows, offs,
+                    lens, lck["ks"] if int8 else None,
+                    lck["vs"] if int8 else None,
                     interpret=(mode == "interpret"))
                 out = L.attention_chunk_merge(q * (hd ** -0.5), None,
                                               None, k, v, acfg, q_pos,
@@ -1161,6 +1259,10 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
                                               vp.astype(v.dtype), k, v,
                                               acfg, q_pos, pfx_valid,
                                               chunk_valid)
+            if mesh is not None:
+                # heads mix here: gather them whole so the wo reduction
+                # keeps single-device summation order (bitwise contract)
+                out = crep(out)
             out = qeinsum("bshk,dhk->bsd", out, lp["attn"]["wo"])
             h = h + out.astype(h.dtype)
             h = h + _mlp_or_moe(lp, h, cfg)
@@ -1182,6 +1284,8 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
                     k.astype(lc["k"].dtype), mode="drop")
                 lc["v"] = lc["v"].at[chunk_blk, chunk_off].set(
                     v.astype(lc["v"].dtype), mode="drop")
+            if mesh is not None:
+                lc = cpool(lc, 2)
             return h, lc
 
         x, new_attn = lax.scan(body, x, (params["blocks"], cache["attn"]))
@@ -1193,9 +1297,13 @@ def _prefill_chunk_fn(cfg: ModelConfig, mode: str = "oracle",
             logits = L.lm_head(_head_weight(params, cfg),
                                x[jnp.arange(b), last])
         new_cache = dict(cache)
-        new_cache["attn"] = new_attn
+        new_cache["attn"] = cpool(new_attn, 3) if mesh is not None \
+            else new_attn
         new_cache["lens"] = cache["lens"].at[slots].set(offs + lens,
                                                        mode="drop")
+        if mesh is not None:
+            logits = crep(logits)
+            new_cache["lens"] = crep(new_cache["lens"])
         return logits, new_cache
 
     return run

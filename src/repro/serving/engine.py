@@ -294,9 +294,24 @@ class Engine:
                  audit_interval: int = 0,
                  shed_after_preempts: Optional[int] = None,
                  stall_shed_limit: int = 3,
-                 spec_tokens: int = 0, draft_proposer: Any = None):
+                 spec_tokens: int = 0, draft_proposer: Any = None,
+                 mesh: Any = None):
         self.model = model
         self.params = params
+        # -- tensor-parallel serving (mesh=None = single-device path) -----
+        # Storage-sharded / compute-replicated: the paged pool shards its
+        # KV-heads dim and weights are stored sharded, but every
+        # cross-device collective the scheme induces is an all-gather, so
+        # streams stay bit-identical to the unsharded engine.  The
+        # allocator/scheduler never see the mesh — block ids, page
+        # tables, leases and StepPlans are device-count-agnostic.
+        self.mesh = mesh
+        self._rep = None
+        if mesh is not None:
+            if cache_kind != "paged":
+                raise ValueError("mesh serving requires the paged cache")
+            self._rep = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -331,7 +346,12 @@ class Engine:
         self.straggler = StragglerDetector(n_hosts=1)
         # decode is the hot loop: jit once (cache/params structures are
         # stable).  Donating the cache avoids a copy per token.
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        if mesh is not None:
+            self._decode = jax.jit(
+                functools.partial(model.decode_step, mesh=mesh),
+                donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         self.key = jax.random.PRNGKey(seed)
 
         self.paged = (cache_kind == "paged"
@@ -350,6 +370,29 @@ class Engine:
             self.cache = model.init_paged_cache(
                 max_slots, block_size=page_size, n_blocks=self.n_pages,
                 max_blocks_per_seq=mb)
+            if mesh is not None:
+                # place the pool sharded (KV-heads over `model`) and the
+                # host-authored control state replicated; params follow
+                # the serve-mode specs.  Only placement changes — the
+                # allocator addresses block ids exactly as before.
+                from repro.distribution import sharding as shardlib
+                cspecs = shardlib.cache_specs(model.cfg, self.cache, mesh)
+                self.cache = jax.device_put(
+                    self.cache, shardlib.to_shardings(cspecs, mesh))
+                if mesh.shape.get("model", 1) <= 1:
+                    # a size-1 `model` axis divides everything, so the
+                    # serve specs would keep their axis names — and
+                    # GSPMD propagates those (physically replicated but
+                    # named) annotations from the weights onto jit
+                    # outputs like the int8 scale pools, where they
+                    # mismatch the replicated placement above and buy a
+                    # second executable per pool key.  Replicate.
+                    self.params = jax.device_put(params, self._rep)
+                else:
+                    pspecs = shardlib.param_specs(model.cfg, params, mesh,
+                                                  mode="serve")
+                    self.params = jax.device_put(
+                        params, shardlib.to_shardings(pspecs, mesh))
         else:
             self.cache = model.init_cache(max_slots, max_seq)
         self.scheduler = Scheduler(
@@ -421,6 +464,17 @@ class Engine:
         self._preempt_streak = 0
         if self.faults is not None:
             self.faults.bind(clock=self._clock, pager=self.pager)
+
+    def _put(self, x, dtype=None):
+        """Host -> device upload for step operands (tokens, lens, page
+        tables, COW indices).  Under a mesh these must be *committed*
+        replicated arrays — an uncommitted ``jnp.asarray`` upload would
+        leave placement to jit and wobble the compile key; replication
+        matches the engine's host-authored-control-state contract."""
+        arr = np.asarray(x, dtype)
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, self._rep)
 
     # -- public API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, **kw) -> int:
@@ -609,14 +663,14 @@ class Engine:
             # last one; the host copy is kept for chunk addressing so
             # the batched calls never read the table back off-device.
             self._host_pt = self.pager.page_table()
-            self.cache["page_table"] = jnp.asarray(self._host_pt)
+            self.cache["page_table"] = self._put(self._host_pt)
         if self.paged and plan.cows:
             # copy-on-write: duplicate the shared blocks' rows before
             # this step's writes land in the fresh copies.  (Counted
             # here, not from allocator stats — a retracted victim's
             # pair never reaches execution.)
-            src = jnp.asarray([s for s, _ in plan.cows], jnp.int32)
-            dst = jnp.asarray([d for _, d in plan.cows], jnp.int32)
+            src = self._put([s for s, _ in plan.cows], np.int32)
+            dst = self._put([d for _, d in plan.cows], np.int32)
             self.cache["attn"] = _copy_pool_blocks(
                 self.cache["attn"], src, dst)
             self.metrics["cow_copies"] += len(plan.cows)
@@ -712,7 +766,7 @@ class Engine:
         that sharing is the point: one pool key, one executable)."""
         if self.model.prefill_compile_count is None:
             return 0
-        return self.model.prefill_compile_count()
+        return self.model.prefill_compile_count(mesh=self.mesh)
 
     def verify_compile_count(self) -> int:
         """Distinct XLA compiles of the speculative verify step (the
@@ -721,7 +775,7 @@ class Engine:
         are distinct executables."""
         if self.model.verify_compile_count is None:
             return 0
-        return self.model.verify_compile_count()
+        return self.model.verify_compile_count(mesh=self.mesh)
 
     # -- fault domain ---------------------------------------------------
     def _fail_request(self, req: Request, msg: str, kind: str,
@@ -965,7 +1019,8 @@ class Engine:
                 slots[i] = c.seq.slot
             logits, self.cache = self.model.prefill_chunk_batch(
                 self.params, toks, self.cache, slots, offs,
-                page_table=self._host_pt, chunk_lens=lens)
+                page_table=self._host_pt, chunk_lens=lens,
+                mesh=self.mesh)
             self.metrics["chunk_batch_calls"] += 1
             self._account_prefix_bytes(offs, lens)
             if self.faults is not None:
@@ -1190,7 +1245,7 @@ class Engine:
         if self.faults is not None:
             self.faults.latency(self._step)   # simulated slow device step
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens))
+            self.params, self.cache, self._put(tokens))
         if self.faults is not None:
             logits = self.faults.corrupt_logits(
                 SITE_DECODE, self._step, logits, row_uids)
@@ -1214,8 +1269,8 @@ class Engine:
         it includes the host's overlap window — wall time the device
         was busy either way."""
         if not p.slots:
-            self.cache["lens"] = jnp.asarray(
-                self.scheduler.device_lens(), jnp.int32)
+            self.cache["lens"] = self._put(
+                self.scheduler.device_lens(), np.int32)
             return p.failed
         slots, failed = p.slots, p.failed
         finite = np.asarray(p.finite) if p.finite is not None else None
@@ -1256,8 +1311,8 @@ class Engine:
         # mid-prefill row whose position the batched step bumped gets its
         # prefill progress back (its garbage KV row is overwritten by the
         # next chunk, or dropped when the block isn't allocated yet).
-        self.cache["lens"] = jnp.asarray(self.scheduler.device_lens(),
-                                         jnp.int32)
+        self.cache["lens"] = self._put(self.scheduler.device_lens(),
+                                       np.int32)
         return finished
 
     def _run_verifies(self, verifies: List[SpecVerify]) -> List[Request]:
@@ -1288,8 +1343,8 @@ class Engine:
                 alive=lambda v:
                     self.scheduler.running.get(v.seq.slot) is v.seq)
             if not verifies:
-                self.cache["lens"] = jnp.asarray(
-                    self.scheduler.device_lens(), jnp.int32)
+                self.cache["lens"] = self._put(
+                    self.scheduler.device_lens(), np.int32)
                 return failed
         nrows, width = self.max_slots, self.spec_tokens + 1
         toks = np.zeros((nrows, width), np.int32)
@@ -1323,7 +1378,8 @@ class Engine:
             self.faults.latency(self._step)
         logits, self.cache = self.model.verify_chunk_batch(
             self.params, toks, self.cache, slots, offs,
-            page_table=self._host_pt, chunk_lens=lens)
+            page_table=self._host_pt, chunk_lens=lens,
+            mesh=self.mesh)
         if self.faults is not None:
             logits = self.faults.corrupt_logits(
                 SITE_DECODE, self._step, logits, row_uids)
@@ -1384,6 +1440,6 @@ class Engine:
                 if done_req is not None:
                     finished.append(done_req)
         finished.extend(failed)
-        self.cache["lens"] = jnp.asarray(self.scheduler.device_lens(),
-                                         jnp.int32)
+        self.cache["lens"] = self._put(self.scheduler.device_lens(),
+                                       np.int32)
         return finished

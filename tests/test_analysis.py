@@ -92,9 +92,32 @@ ENTRY %main.1 (p0: f32[16,512]) -> f32[16,512] {
         assert hlo_cost._trip_count("no compare here") == 1
 
     def test_real_lowered_module(self):
-        """End to end on an actual compiled SPMD module."""
+        """End to end on an actual compiled SPMD module: a row-parallel
+        matmul (contraction dim sharded over `model`) lowers to a
+        partial-sum all-reduce, and the parser prices its wire bytes at
+        the ring cost for the real device count.  Runs for real under
+        the CI multi-device lane's forced host devices."""
         if jax.device_count() < 2:
-            pytest.skip("needs >1 device")
+            pytest.skip("needs >1 device (CI multi-device lane)")
+        from jax.sharding import Mesh, NamedSharding
+        from jax.sharding import PartitionSpec as P
+        n = jax.device_count()
+        mesh = Mesh(np.asarray(jax.devices()).reshape(n), ("model",))
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+        w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+        compiled = jax.jit(
+            lambda a, b: a @ b,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+            out_shardings=NamedSharding(mesh, P()),
+        ).lower(x, w).compile()
+        got = hlo_cost.collective_wire_bytes(compiled.as_text())
+        assert got.get("all-reduce", 0) > 0, \
+            f"no all-reduce priced in SPMD module: {got}"
+        # one ring all-reduce of the full (8, 32) f32 partial sums
+        out_bytes = 8 * 32 * 4
+        assert got["all-reduce"] == pytest.approx(
+            2 * out_bytes * (n - 1) / n)
 
     def test_group_size_iota_format(self):
         line = "replica_groups=[8,32]<=[256] ..."

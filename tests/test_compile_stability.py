@@ -461,3 +461,115 @@ def test_fused_whole_prompt_bitexact_vs_oneshot(monkeypatch, kv):
         np.testing.assert_allclose(np.asarray(l_chunk),
                                    np.asarray(l_one),
                                    rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel meshes: one executable per (pool key, mesh shape)
+# ---------------------------------------------------------------------------
+
+
+def _avail_mesh_sizes():
+    return [n for n in (1, 2, 4) if jax.device_count() >= n]
+
+
+def _serve_traffic(m, params, mesh, lens, seed, kv=None):
+    from repro.serving.engine import Engine
+    rng = np.random.default_rng(seed)
+    eng = Engine(m, params, max_slots=3, max_seq=64, page_size=8,
+                 prefill_chunk_tokens=16, mesh=mesh)
+    for n in lens:
+        eng.submit(rng.integers(4, 500, size=n).astype(np.int32),
+                   max_new_tokens=2, temperature=0.0)
+    assert all(r.error is None for r in eng.run())
+    return eng
+
+
+def _chunk_count(m, mesh):
+    # The compile probe is process-global per (cfg, mesh): earlier tests
+    # in the suite may already have warmed this fn with OTHER pool keys,
+    # so mesh tests below assert deltas against this snapshot, never
+    # absolute counts.
+    return m.prefill_compile_count(mesh=mesh)
+
+
+def test_sharded_engine_one_executable_per_mesh_shape():
+    """Under a mesh, the chunk step stays at ONE executable per
+    (pool key, mesh shape): traffic churn in prompt lengths, offsets
+    and batch composition never grows the count.  Mesh sizes beyond the
+    local device count are skipped here and exercised by the CI
+    multi-device lane."""
+    from repro.launch.mesh import make_serve_mesh
+    m, params = _model()
+    for msize in _avail_mesh_sizes():
+        mesh = make_serve_mesh(msize)
+        c0 = _chunk_count(m, mesh)
+        eng = _serve_traffic(m, params, mesh, (5, 19, 11), seed=11)
+        grew = eng.prefill_compile_count() - c0
+        # <= 1, not == 1: an earlier test serving this same (pool key,
+        # mesh) already paid the one executable, leaving zero to grow
+        assert grew <= 1, \
+            f"mesh={msize}: {grew} fresh chunk executables (bound: 1)"
+        # wave 2: all-new lengths on a FRESH engine -> zero fresh
+        # executables (reuse holds across engines, per mesh)
+        eng2 = _serve_traffic(m, params, mesh, (30, 7, 23), seed=12)
+        assert eng2.prefill_compile_count() == c0 + grew, \
+            f"mesh={msize}: new traffic shapes recompiled the chunk step"
+
+
+def test_mesh_switch_never_recompiles_other_mesh():
+    """Each mesh shape owns an isolated jit entry: serving over mesh B
+    must not invalidate or grow mesh A's executable, and returning to A
+    serves fully warm.  Requires >=2 devices (the CI multi-device
+    lane); on one device the mesh-1-vs-unsharded half still runs."""
+    from repro.launch.mesh import make_serve_mesh
+    m, params = _model()
+    mesh1 = make_serve_mesh(1)
+
+    c_un0 = _chunk_count(m, None)
+    c1_0 = _chunk_count(m, mesh1)
+    e0 = _serve_traffic(m, params, None, (6, 17, 9), seed=13)
+    c_unsharded = e0.prefill_compile_count()
+    assert c_unsharded - c_un0 <= 1
+    # unsharded serving never touches the mesh-1 entry...
+    assert _chunk_count(m, mesh1) == c1_0
+    e1 = _serve_traffic(m, params, mesh1, (6, 17, 9), seed=13)
+    c1 = e1.prefill_compile_count()
+    # ...and mesh-1 serving pays at most its own one executable while
+    # leaving the unsharded entry untouched (distinct jit entries)
+    assert c1 - c1_0 <= 1
+    assert e0.prefill_compile_count() == c_unsharded
+
+    if jax.device_count() >= 2:
+        mesh2 = make_serve_mesh(2)
+        c2_0 = _chunk_count(m, mesh2)
+        e2 = _serve_traffic(m, params, mesh2, (6, 17, 9), seed=13)
+        assert e2.prefill_compile_count() - c2_0 <= 1
+        c2 = e2.prefill_compile_count()
+        # mesh-2 serving left mesh-1's (and unsharded's) entries alone
+        assert e1.prefill_compile_count() == c1
+        assert e0.prefill_compile_count() == c_unsharded
+        # switch back: mesh-1 serves warm, count pinned
+        e1b = _serve_traffic(m, params, mesh1, (6, 17, 9), seed=13)
+        assert e1b.prefill_compile_count() == c1
+        assert e2.prefill_compile_count() == c2
+
+
+@pytest.mark.skipif(jax.device_count() < 2, reason="needs >=2 devices "
+                    "(run under the CI multi-device lane)")
+def test_sharded_pool_key_compiles_are_per_quantization(monkeypatch):
+    """int8 KV is a different pool key: serving it over the same mesh
+    adds exactly one more executable to that mesh's entry and leaves
+    the f32 count alone."""
+    from repro.launch.mesh import make_serve_mesh
+    mesh = make_serve_mesh(2)
+    m, params = _model()
+    e_f32 = _serve_traffic(m, params, mesh, (5, 19), seed=14)
+    c_f32 = e_f32.prefill_compile_count()
+    mq, pq = _model("int8")
+    pq = mq.quantize(pq)
+    cq_0 = _chunk_count(mq, mesh)
+    e_q = _serve_traffic(mq, pq, mesh, (5, 19), seed=14)
+    # the quantized cfg is its own lru entry; serving it pays at most
+    # its own one-per-pool-key executable and leaves f32's count alone
+    assert e_q.prefill_compile_count() - cq_0 <= 1
+    assert e_f32.prefill_compile_count() == c_f32
